@@ -1,0 +1,25 @@
+"""Fig. 9 — container-initiating-delay sensitivity for EBPSM (10..50 s)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.scheduler import EBPSM
+from repro.core.types import PlatformConfig
+
+from .common import run_policy, summarize, write_csv
+
+DELAYS_S = (10, 20, 30, 40, 50)
+
+
+def run(full: bool = False) -> List[Dict]:
+    rows = []
+    for delay in DELAYS_S:
+        # keep the paper's 0.4 s init epsilon; scale the download component
+        cfg = PlatformConfig().with_(
+            container_download_ms=delay * 1000 - 400)
+        eng, res = run_policy(cfg, EBPSM, 6.0, full)
+        row = {"container_delay_s": delay, "policy": "EBPSM"}
+        row.update(summarize(res))
+        rows.append(row)
+    write_csv("fig9_container_delay", rows)
+    return rows

@@ -1,0 +1,30 @@
+"""Table 3 — cost/budget ratio percentiles of budget-violated cases."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.scheduler import EBPSM
+from repro.core.types import PlatformConfig
+
+from .common import run_policy, write_csv
+
+RATES = (0.5, 1.0, 6.0, 12.0)
+PERCENTILES = (10, 30, 50, 70, 90)
+
+
+def run(full: bool = False) -> List[Dict]:
+    cfg = PlatformConfig()
+    rows = []
+    for rate in RATES:
+        _, res = run_policy(cfg, EBPSM, rate, full)
+        ratios = res.violated_ratios()
+        row: Dict = {"rate_wf_per_min": rate, "n_violations": len(ratios),
+                     "n_workflows": len(res.workflows)}
+        for p in PERCENTILES:
+            row[f"p{p}"] = (float(np.percentile(ratios, p))
+                            if ratios else 1.0)
+        rows.append(row)
+    write_csv("table3_cost_ratio", rows)
+    return rows

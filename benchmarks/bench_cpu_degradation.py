@@ -1,0 +1,31 @@
+"""Figs. 5–6 — CPU performance-degradation sensitivity (EBPSM vs MSLBL_MW).
+
+Degradation ~ N(max/2, 1%) clipped at max, max ∈ {20..80}% (paper §5.2).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.scheduler import EBPSM, MSLBL_MW
+from repro.core.types import PlatformConfig
+
+from .common import run_policy, summarize, write_csv
+
+DEGRADATIONS = (0.2, 0.4, 0.6, 0.8)
+
+
+def run(full: bool = False) -> List[Dict]:
+    rows = []
+    for dmax in DEGRADATIONS:
+        cfg = PlatformConfig().with_(
+            cpu_degradation_mean=dmax / 2, cpu_degradation_std=0.01,
+            cpu_degradation_max=dmax)
+        for pol in (EBPSM, MSLBL_MW):
+            eng, res = run_policy(cfg, pol, 6.0, full)
+            row = {"max_degradation": dmax, "policy": pol.name}
+            row.update(summarize(res))
+            for name, cnt in eng.pool.vm_count_by_type.items():
+                row[f"vms_{name}"] = cnt
+            rows.append(row)
+    write_csv("fig5_fig6_cpu_degradation", rows)
+    return rows

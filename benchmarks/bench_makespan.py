@@ -1,0 +1,29 @@
+"""Fig. 3 + Fig. 4 — makespan / budget-met / VM usage across arrival rates
+for all five policies.  One simulation per (rate × policy) feeds both
+figures (the paper derives them from the same runs).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.scheduler import ALL_POLICIES
+from repro.core.types import PlatformConfig
+
+from .common import run_policy, summarize, write_csv
+
+RATES = (0.5, 1.0, 6.0, 12.0)
+
+
+def run(full: bool = False) -> List[Dict]:
+    cfg = PlatformConfig()
+    rows = []
+    for rate in RATES:
+        for pol in ALL_POLICIES:
+            eng, res = run_policy(cfg, pol, rate, full)
+            row = {"rate_wf_per_min": rate, "policy": pol.name}
+            row.update(summarize(res))
+            for name, cnt in eng.pool.vm_count_by_type.items():
+                row[f"vms_{name}"] = cnt
+            rows.append(row)
+    write_csv("fig3_fig4_makespan_budget_vm", rows)
+    return rows

@@ -1,0 +1,26 @@
+"""Figs. 7–8 — VM provisioning-delay sensitivity (45..180 s, paper §5.3)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.scheduler import EBPSM, MSLBL_MW
+from repro.core.types import PlatformConfig
+
+from .common import run_policy, summarize, write_csv
+
+DELAYS_S = (45, 90, 135, 180)
+
+
+def run(full: bool = False) -> List[Dict]:
+    rows = []
+    for delay in DELAYS_S:
+        cfg = PlatformConfig().with_(vm_provision_delay_ms=delay * 1000)
+        for pol in (EBPSM, MSLBL_MW):
+            eng, res = run_policy(cfg, pol, 6.0, full)
+            row = {"prov_delay_s": delay, "policy": pol.name}
+            row.update(summarize(res))
+            for name, cnt in eng.pool.vm_count_by_type.items():
+                row[f"vms_{name}"] = cnt
+            rows.append(row)
+    write_csv("fig7_fig8_prov_delay", rows)
+    return rows

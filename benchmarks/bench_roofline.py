@@ -1,0 +1,35 @@
+"""§Roofline — three-term analysis per (arch × shape) from dry-run
+artifacts (run ``python -m repro.launch.dryrun --all --both-meshes``
+first; cells without artifacts are reported as missing).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.launch.roofline import analyze, load_artifacts
+
+from .common import write_csv
+
+
+def run(full: bool = False) -> List[Dict]:
+    rows = []
+    for tag in ("singlepod", "multipod"):
+        for art in load_artifacts("artifacts/dryrun", tag):
+            if "skipped" in art:
+                rows.append({"mesh": tag, "arch": art["arch"],
+                             "shape": art["shape"],
+                             "skipped": art["skipped"]})
+                continue
+            a = analyze(art)
+            rows.append({
+                "mesh": tag, "arch": art["arch"], "shape": art["shape"],
+                "compute_s": a["compute_s"], "memory_s": a["memory_s"],
+                "collective_s": a["collective_s"],
+                "dominant": a["dominant"],
+                "useful_flops_ratio": a["useful_flops_ratio"],
+                "roofline_fraction": a["roofline_fraction"],
+                "hbm_fit": a["hbm_fit_ok"],
+                "compile_s": art["compile_s"],
+            })
+    write_csv("roofline", rows)
+    return rows

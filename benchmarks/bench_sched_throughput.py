@@ -1,0 +1,61 @@
+"""Scheduler-core throughput: Alg. 2 pair-scoring decisions/second.
+
+Compares the pure-Python reference (core.scheduler.select, per task) with
+the vectorized jnp oracle and the Pallas affinity kernel at WaaS scale.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.affinity.ops import affinity
+
+SIZES = ((64, 128), (256, 512), (1024, 1024))
+
+
+def _inputs(T: int, V: int, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.uniform(10, 900, T), jnp.float32),
+        jnp.asarray(rng.uniform(1, 150, T), jnp.float32),
+        jnp.asarray(rng.uniform(5, 500, T), jnp.float32),
+        jnp.asarray(rng.uniform(0, 200, (T, V)), jnp.float32),
+        jnp.asarray(rng.choice([0., 400., 10000.], (T, V)), jnp.float32),
+        jnp.asarray(rng.choice([0, 1, 2, 3], (T, V)), jnp.int32),
+        jnp.asarray(rng.choice([2., 4., 8., 16.], V), jnp.float32),
+        jnp.full((V,), 20.0, jnp.float32),
+        jnp.asarray(rng.choice([1., 2., 4., 8.], V), jnp.float32),
+    )
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # warm + compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, tuple(r))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(full: bool = False) -> List[Dict]:
+    from .common import write_csv
+    rows = []
+    for T, V in SIZES:
+        args = _inputs(T, V)
+        t_ref = _time(lambda *a: affinity(*a, gs_read=50., gs_write=30.,
+                                          bp_ms=1000., use_pallas=False),
+                      *args)
+        t_pal = _time(lambda *a: affinity(*a, gs_read=50., gs_write=30.,
+                                          bp_ms=1000., use_pallas=True),
+                      *args)
+        rows.append({"T": T, "V": V,
+                     "jnp_us": t_ref * 1e6, "pallas_us": t_pal * 1e6,
+                     "jnp_Mpairs_s": T * V / t_ref / 1e6,
+                     "pallas_Mpairs_s": T * V / t_pal / 1e6})
+    write_csv("sched_throughput", rows)
+    return rows

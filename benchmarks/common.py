@@ -1,0 +1,83 @@
+"""Shared benchmark machinery: workload construction + result tables.
+
+Default scale is CI-friendly (~120 workflows ≈ 45k tasks per point);
+``--full`` reproduces the paper's 1000-workflow workloads.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import SimEngine
+from repro.core.scheduler import Policy
+from repro.core.types import PlatformConfig, SimResult
+from repro.workflows.workload import WorkloadSpec, generate_workload
+
+OUT_DIR = os.environ.get("BENCH_OUT", "artifacts/bench")
+
+
+def workload(cfg: PlatformConfig, rate: float, full: bool, seed: int = 11):
+    """Default: CI-scale (150 wfs, small+medium ≈ 11k tasks per point).
+    --full: the paper's scale (1000 wfs incl. large ≈ 380k tasks — hours
+    of simulated scheduling; the large class alone multiplies queue×pool
+    work ~50×, which is exactly the regime the batched JAX cycles and the
+    affinity kernel exist for)."""
+    n = 1000 if full else 150
+    sizes = ("small", "medium", "large") if full else ("small", "medium")
+    spec = WorkloadSpec(n_workflows=n, arrival_rate_per_min=rate, seed=seed,
+                        sizes=sizes)
+    return generate_workload(cfg, spec)
+
+
+def run_policy(cfg: PlatformConfig, policy: Policy, rate: float, full: bool,
+               seed: int = 11, trace: bool = False):
+    eng = SimEngine(cfg, policy, workload(cfg, rate, full, seed), seed=0,
+                    trace=trace)
+    res = eng.run()
+    return eng, res
+
+
+def summarize(res: SimResult) -> Dict[str, Any]:
+    by_app = res.makespans_by_app()
+    row: Dict[str, Any] = {
+        "mean_makespan_s": float(np.mean([w.makespan_ms for w in
+                                          res.workflows])) / 1000,
+        "budget_met": res.budget_met_fraction,
+        "utilization": res.avg_vm_utilization,
+        "total_vms": res.total_vms,
+        "wall_s": round(res.wall_s, 2),
+    }
+    for app, ms in sorted(by_app.items()):
+        row[f"mk_{app}_s"] = float(np.mean(ms)) / 1000
+    return row
+
+
+def write_csv(name: str, rows: List[Dict[str, Any]]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if rows:
+        keys = sorted({k for r in rows for k in r}, key=str)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def print_rows(name: str, rows: Sequence[Dict[str, Any]],
+               cols: Optional[Sequence[str]] = None) -> None:
+    print(f"\n== {name} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = cols or [k for k in rows[0] if not k.startswith("mk_")]
+    print(" | ".join(f"{c:>16s}" for c in cols))
+    for r in rows:
+        print(" | ".join(
+            f"{r.get(c, ''):>16.4g}" if isinstance(r.get(c), float)
+            else f"{str(r.get(c, '')):>16s}" for c in cols))

@@ -1,0 +1,217 @@
+"""Budget distribution — Algorithm 1 (DistributeBudget/SFTD) and
+Algorithm 3 (UpdateBudget) of the paper.
+
+The distribution assigns every task a sub-budget.  Pass 1 levels the DAG
+(Deadline Top Level, Eq. 7), orders tasks by ascending EFT within each level
+(Eq. 8) to form the estimated execution order ``S``; pass 2 allocates the
+cheapest-VM cost to every task and then spends any leftover budget upgrading
+the *earliest* tasks in ``S`` to the fastest affordable VM type
+(Slowest-First Task-based Distribution).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from . import costs
+from .types import PlatformConfig, Task, VMType, Workflow
+
+
+def assign_levels(wf: Workflow) -> None:
+    """Eq. (7): level(t) = 0 for entries else max(level(parents)) + 1."""
+    order = topological_order(wf)
+    for tid in order:
+        t = wf.tasks[tid]
+        t.level = 0 if not t.parents else 1 + max(wf.tasks[p].level for p in t.parents)
+
+
+def topological_order(wf: Workflow) -> List[int]:
+    """Kahn topological order with deterministic (lowest-tid) tie-breaks."""
+    indeg = [len(t.parents) for t in wf.tasks]
+    import heapq
+
+    heap = [i for i, d in enumerate(indeg) if d == 0]
+    heapq.heapify(heap)
+    out: List[int] = []
+    while heap:
+        u = heapq.heappop(heap)
+        out.append(u)
+        for c in wf.tasks[u].children:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                heapq.heappush(heap, c)
+    assert len(out) == len(wf.tasks), "cycle in workflow"
+    return out
+
+
+def input_mb(wf: Workflow, task: Task) -> float:
+    """Total input volume d_t^in (external + every parent's output)."""
+    out_of = [t.out_mb for t in wf.tasks]
+    return costs.total_input_mb(task, out_of)
+
+
+def estimated_eft(
+    cfg: PlatformConfig, wf: Workflow, ref_vmt: VMType
+) -> List[int]:
+    """Eq. (8): EFT on a reference VM type (cheapest), in ms."""
+    eft = [0] * wf.n_tasks
+    for tid in topological_order(wf):
+        t = wf.tasks[tid]
+        pt = costs.processing_ms(cfg, ref_vmt, t, input_mb(wf, t))
+        start = max((eft[p] for p in t.parents), default=0)
+        eft[tid] = start + pt
+    return eft
+
+
+def execution_order(cfg: PlatformConfig, wf: Workflow) -> List[int]:
+    """Estimated execution order S: level-major, EFT-ascending within level."""
+    assign_levels(wf)
+    ref = cfg.vm_types[0]  # cheapest type as the reference estimator
+    eft = estimated_eft(cfg, wf, ref)
+    order = sorted(
+        range(wf.n_tasks),
+        key=lambda tid: (wf.tasks[tid].level, eft[tid], tid),
+    )
+    for rank, tid in enumerate(order):
+        wf.tasks[tid].rank = rank
+    return order
+
+
+def distribute_budget(
+    cfg: PlatformConfig,
+    wf: Workflow,
+    budget: float,
+    task_ids: Optional[Sequence[int]] = None,
+) -> float:
+    """Algorithm 1.  Mutates ``task.budget``; returns the undistributed
+    remainder (spare budget — Alg. 3 folds it into the next update so no
+    money is ever lost).
+
+    Pass 1 allocates the cheapest-VM conservative cost to tasks in order
+    *while the pool lasts* (the paper's ``while β > 0``); once exhausted,
+    later tasks receive whatever fraction remains (possibly zero).  Budget
+    is strictly conserved: Σ sub-budgets ≤ β always.
+
+    Pass 2 (SFTD) upgrades the earliest tasks in ``S`` to the fastest type
+    still affordable with the leftover.
+
+    ``task_ids`` restricts distribution to a subset (used by Algorithm 3 to
+    redistribute over unscheduled tasks); order within the subset follows the
+    original estimated execution order (``task.rank``).
+    """
+    if task_ids is None:
+        order = execution_order(cfg, wf)
+    else:
+        order = sorted(task_ids, key=lambda tid: wf.tasks[tid].rank)
+    if not order:
+        return budget
+
+    cheapest = cfg.vm_types[0]
+    # Pass 1: cheapest-VM conservative cost, allocated while the pool lasts.
+    alloc: Dict[int, float] = {}
+    remaining = budget
+    for tid in order:
+        t = wf.tasks[tid]
+        want = costs.estimate_full_cost(cfg, cheapest, t, input_mb(wf, t))
+        give = min(want, max(remaining, 0.0))
+        alloc[tid] = give
+        remaining -= give
+
+    # Pass 2 (SFTD): sweep the order earliest-first, upgrading each task's
+    # allocation by ONE VM-type tier per visit ("upgrade ... for a faster VM
+    # type starting from the earliest tasks"), until a sweep changes nothing.
+    # One-tier sweeps keep the allocation distribution unimodal — the whole
+    # workflow climbs the VM ladder together instead of splitting into a
+    # fastest/cheapest bimodal mix (which would pollute the shared pool with
+    # slow cache-carrier VMs).
+    if remaining > 0:
+        by_speed = sorted(range(len(cfg.vm_types)), key=lambda i: cfg.vm_types[i].mips)
+        tier_cost: Dict[int, List[float]] = {}
+        tier_of: Dict[int, int] = {}
+        for tid in order:
+            t = wf.tasks[tid]
+            mb = input_mb(wf, t)
+            tier_cost[tid] = [
+                costs.estimate_full_cost(cfg, cfg.vm_types[i], t, mb)
+                for i in by_speed
+            ]
+            # Current tier: highest tier fully covered by the allocation.
+            tier_of[tid] = 0
+            for k in range(len(by_speed) - 1, -1, -1):
+                if alloc[tid] >= tier_cost[tid][k] - 1e-9:
+                    tier_of[tid] = k
+                    break
+        changed = True
+        while remaining > 1e-9 and changed:
+            changed = False
+            for tid in order:
+                k = tier_of[tid]
+                if k + 1 >= len(by_speed):
+                    continue
+                delta = tier_cost[tid][k + 1] - alloc[tid]
+                if 0 < delta <= remaining + 1e-9:
+                    alloc[tid] = tier_cost[tid][k + 1]
+                    tier_of[tid] = k + 1
+                    remaining -= delta
+                    changed = True
+                elif delta <= 0:
+                    tier_of[tid] = k + 1
+                    changed = True
+
+    for tid in order:
+        wf.tasks[tid].budget = alloc[tid]
+    return max(remaining, 0.0)
+
+
+def update_budget(
+    cfg: PlatformConfig,
+    wf: Workflow,
+    finished_tid: int,
+    actual_cost: float,
+    spare_budget: float,
+    unscheduled: Sequence[int],
+) -> float:
+    """Algorithm 3.  Returns the new spare budget.
+
+    The finished task's allocation plus the spare budget absorb the actual
+    cost; any surplus (or debt) flows into the pool redistributed over the
+    unscheduled tasks, so uncertainty never propagates into a violation.
+    The undistributed remainder of the redistribution persists as the spare
+    (conservation: money is never created or silently dropped).
+    """
+    t_f = wf.tasks[finished_tid]
+    pool = sum(wf.tasks[tid].budget for tid in unscheduled)
+    headroom = t_f.budget + spare_budget
+    if actual_cost <= headroom:
+        pool += headroom - actual_cost
+    else:
+        pool -= actual_cost - headroom
+    pool = max(pool, 0.0)
+    if unscheduled:
+        return distribute_budget(cfg, wf, pool, task_ids=list(unscheduled))
+    return pool
+
+
+def min_max_workflow_cost(cfg: PlatformConfig, wf: Workflow) -> tuple:
+    """Budget-range estimate used by workload generation (Section 5).
+
+    Minimum: sequential execution of every task on the cheapest type.
+    Maximum: every task on its own fastest-type VM (max parallel spend).
+    """
+    cheapest = cfg.vm_types[0]
+    fastest = max(cfg.vm_types, key=lambda v: v.mips)
+    lo = sum(
+        costs.task_cost(
+            cfg, cheapest, t, input_mb(wf, t),
+            include_vm_provision=False, container_ms=0,
+        )
+        for t in wf.tasks
+    )
+    # Sequential on one VM: charge provisioning + one container once.
+    lo += costs.billed_cost(
+        cfg, cheapest, cfg.vm_provision_delay_ms + cfg.container_provision_ms
+    )
+    hi = sum(
+        costs.estimate_full_cost(cfg, fastest, t, input_mb(wf, t))
+        for t in wf.tasks
+    )
+    return lo, hi

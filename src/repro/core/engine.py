@@ -1,0 +1,383 @@
+"""Discrete-event WaaS simulation engine (reference implementation).
+
+Event-driven, heap-ordered, integer-millisecond clock.  Scheduling cycles run
+after all events at a timestamp are applied — exactly the paper's trigger
+rule ("the arrival of a new workflow's job and the completion of a task").
+
+This engine is the semantic oracle: the vectorized JAX engine
+(`core.jax_engine`) is property-tested against it, and the Pallas affinity
+kernel replicates its tier-selection rule bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time as _time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from . import budget as budget_mod
+from . import costs
+from .mslbl import distribute_budget_mslbl
+from .scheduler import Placement, Policy, select
+from .types import (
+    MS,
+    PlatformConfig,
+    SimResult,
+    Task,
+    Workflow,
+    WorkflowResult,
+    degradation_tables,
+)
+from ..sim.cloud import VM, VM_BUSY, VM_IDLE, VM_PROVISIONING, DataKey, VMPool
+
+ARRIVAL, FINISH, VM_READY, REAP = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class _WfState:
+    wf: Workflow
+    spare: float = 0.0
+    cost: float = 0.0
+    remaining: int = 0
+    finish_ms: int = 0
+    unscheduled: Set[int] = dataclasses.field(default_factory=set)
+    pending_parents: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class _Running:
+    wid: int
+    tid: int
+    vm: VM
+    triggered_provision: bool
+    actual_cost: float = 0.0
+
+
+class SimEngine:
+    """One policy × one workload → SimResult."""
+
+    def __init__(
+        self,
+        cfg: PlatformConfig,
+        policy: Policy,
+        workflows: Sequence[Workflow],
+        seed: int = 0,
+        trace: bool = False,
+        batched: object = "auto",
+    ):
+        """``batched``: True / False / "auto" — use the JAX batched
+        scheduling cycle (core.jax_cycles) when the queue×pool product is
+        large.  EBPSM-family policies only; MSLBL mutates spare budget
+        mid-cycle and stays sequential."""
+        self.cfg = cfg
+        self.policy = policy
+        self.batched = batched
+        self.workflows = list(workflows)
+        self.pool = VMPool(cfg)
+        self.queue: List[Tuple[int, int, int]] = []  # (est_ms, wid, tid)
+        self.events: List[Tuple[int, int, int, tuple]] = []
+        self._seq = 0
+        self.now = 0
+        self.n_events = 0
+        self.wf_state: Dict[int, _WfState] = {}
+        self.running: Dict[Tuple[int, int], _Running] = {}
+        self.vm_bound: Dict[int, Tuple[int, int]] = {}  # vmid -> (wid, tid)
+        self.trace_rows: List[tuple] = [] if trace else None
+        total_tasks = sum(w.n_tasks for w in self.workflows)
+        # Global per-task degradation tables, indexed by task global id.
+        self.cpu_deg, self.bw_in_deg, self.bw_out_deg = degradation_tables(
+            cfg, total_tasks, seed
+        )
+        self._task_base: Dict[int, int] = {}
+        base = 0
+        for w in self.workflows:
+            self._task_base[w.wid] = base
+            base += w.n_tasks
+
+    # ---- event plumbing ----------------------------------------------------
+    def _push(self, t_ms: int, kind: int, payload: tuple) -> None:
+        heapq.heappush(self.events, (t_ms, self._seq, kind, payload))
+        self._seq += 1
+
+    def _gid(self, wid: int, tid: int) -> int:
+        return self._task_base[wid] + tid
+
+    # ---- main loop -----------------------------------------------------------
+    def run(self) -> SimResult:
+        t0 = _time.time()
+        for wf in self.workflows:
+            self._push(wf.arrival_ms, ARRIVAL, (wf.wid,))
+        while self.events:
+            t_ms = self.events[0][0]
+            self.now = t_ms
+            need_cycle = False
+            while self.events and self.events[0][0] == t_ms:
+                _, _, kind, payload = heapq.heappop(self.events)
+                self.n_events += 1
+                if kind == ARRIVAL:
+                    self._handle_arrival(payload[0])
+                    need_cycle = True
+                elif kind == FINISH:
+                    self._handle_finish(*payload)
+                    need_cycle = True
+                elif kind == VM_READY:
+                    self._handle_vm_ready(payload[0])
+                elif kind == REAP:
+                    self._handle_reap(*payload)
+            if need_cycle:
+                self._schedule_cycle()
+                if self.policy.idle_threshold_ms == 0:
+                    self._reap_now()
+        self.pool.finalize(self.now)
+        results = [
+            WorkflowResult(
+                wid=s.wf.wid,
+                app=s.wf.app,
+                n_tasks=s.wf.n_tasks,
+                budget=s.wf.budget,
+                cost=s.cost,
+                arrival_ms=s.wf.arrival_ms,
+                finish_ms=s.finish_ms,
+            )
+            for s in self.wf_state.values()
+        ]
+        return SimResult(
+            workflows=results,
+            vm_seconds_by_type=self.pool.vm_seconds_by_type,
+            vm_busy_seconds_by_type=self.pool.vm_busy_seconds_by_type,
+            vm_count_by_type=self.pool.vm_count_by_type,
+            total_events=self.n_events,
+            wall_s=_time.time() - t0,
+        )
+
+    # ---- handlers --------------------------------------------------------------
+    def _handle_arrival(self, wid: int) -> None:
+        wf = self.workflows[wid]
+        st = _WfState(wf=wf, remaining=wf.n_tasks)
+        st.unscheduled = set(range(wf.n_tasks))
+        st.pending_parents = {t.tid: len(t.parents) for t in wf.tasks}
+        self.wf_state[wid] = st
+        if self.policy.budget_mode == "mslbl":
+            distribute_budget_mslbl(self.cfg, wf, wf.budget)
+        else:
+            st.spare = budget_mod.distribute_budget(self.cfg, wf, wf.budget)
+        for tid in wf.entry_tasks():
+            heapq.heappush(self.queue, (self.now, wid, tid))
+
+    def _inputs_of(self, wf: Workflow, task: Task) -> List[Tuple[DataKey, float]]:
+        ins: List[Tuple[DataKey, float]] = []
+        if task.ext_in_mb > 0:
+            ins.append((("ext", wf.wid, task.tid), task.ext_in_mb))
+        for name, mb in task.shared_in:   # cross-tenant shared data
+            ins.append((("shared", name, 0), mb))
+        for p in task.parents:
+            ins.append((("out", wf.wid, p), wf.tasks[p].out_mb))
+        return ins
+
+    def _handle_finish(self, wid: int, tid: int) -> None:
+        run = self.running.pop((wid, tid))
+        st = self.wf_state[wid]
+        wf = st.wf
+        task = wf.tasks[tid]
+        vm = run.vm
+        # Cache this task's output locally (the resource-sharing policy).
+        vm.cache_put(self.cfg, ("out", wid, tid), task.out_mb,
+                     self.pool.data_index)
+        vm.status = VM_IDLE
+        vm.idle_since_ms = self.now
+        self.vm_bound.pop(vm.vmid, None)
+        if self.policy.idle_threshold_ms > 0:
+            self._push(
+                self.now + self.policy.idle_threshold_ms, REAP, (vm.vmid, self.now)
+            )
+        # Actual cost (Eq. 5) and budget bookkeeping.
+        actual = self._actual_cost_of(run)
+        st.cost += actual
+        st.remaining -= 1
+        st.finish_ms = max(st.finish_ms, self.now)
+        if self.policy.budget_mode == "mslbl":
+            st.spare += task.budget - actual
+        else:
+            st.spare = budget_mod.update_budget(
+                self.cfg, wf, tid, actual, st.spare, sorted(st.unscheduled)
+            )
+        # Release ready children.
+        for c in task.children:
+            st.pending_parents[c] -= 1
+            if st.pending_parents[c] == 0:
+                heapq.heappush(self.queue, (self.now, wid, c))
+
+    def _actual_cost_of(self, run: _Running) -> float:
+        return run.actual_cost  # computed at dispatch time
+
+    def _handle_vm_ready(self, vmid: int) -> None:
+        vm = self.pool.vms[vmid]
+        if vm.status == VM_PROVISIONING:
+            bound = self.vm_bound.get(vmid)
+            if bound is not None:
+                vm.status = VM_BUSY
+                self._start_pipeline(*bound, vm, triggered_provision=True)
+            else:
+                vm.status = VM_IDLE
+                vm.idle_since_ms = self.now
+                if self.policy.idle_threshold_ms > 0:
+                    self._push(
+                        self.now + self.policy.idle_threshold_ms,
+                        REAP,
+                        (vmid, self.now),
+                    )
+
+    def _handle_reap(self, vmid: int, idle_marker_ms: int) -> None:
+        vm = self.pool.vms[vmid]
+        if vm.status == VM_IDLE and vm.idle_since_ms == idle_marker_ms:
+            self.pool.terminate(vm, self.now)
+
+    def _reap_now(self) -> None:
+        for vm in self.pool.idle_vms():
+            self.pool.terminate(vm, self.now)
+
+    # ---- scheduling cycle (Alg. 2 driver) ------------------------------------
+    def _use_batched(self, n_queue: int, n_idle: int) -> bool:
+        if self.policy.budget_mode != "ebpsm":
+            return False
+        if self.batched is True:
+            return True
+        if self.batched == "auto":
+            return n_queue * n_idle >= 8192
+        return False
+
+    def _schedule_cycle(self) -> None:
+        idle = self.pool.idle_vms()
+        if self.queue and self._use_batched(len(self.queue), len(idle)):
+            self._schedule_cycle_batched(idle)
+            return
+        while self.queue:
+            est, wid, tid = heapq.heappop(self.queue)
+            st = self.wf_state[wid]
+            wf = st.wf
+            task = wf.tasks[tid]
+            budget_eff = task.budget
+            if self.policy.budget_mode == "mslbl" and st.spare > 0:
+                budget_eff += st.spare
+            inputs = self._inputs_of(wf, task)
+            placement = select(
+                self.cfg,
+                self.policy,
+                task,
+                wid,
+                wf.app,
+                inputs,
+                budget_eff,
+                idle,
+            )
+            if self.policy.budget_mode == "mslbl":
+                # Spare consumed by how much the estimate exceeds the base.
+                used = max(0.0, placement.est_cost - task.budget)
+                st.spare -= min(used, max(st.spare, 0.0))
+            st.unscheduled.discard(tid)
+            if placement.vm is not None:
+                vm = placement.vm
+                vm.status = VM_BUSY
+                idle = [v for v in idle if v.vmid != vm.vmid]
+                self.vm_bound[vm.vmid] = (wid, tid)
+                self._start_pipeline(wid, tid, vm, triggered_provision=False)
+            else:
+                tag = self.policy.owner_tag(wid, wf.app)
+                vm = self.pool.provision(placement.new_vmt_idx, self.now, tag)
+                self.vm_bound[vm.vmid] = (wid, tid)
+                self._push(vm.ready_ms, VM_READY, (vm.vmid,))
+            if self.trace_rows is not None:
+                self.trace_rows.append(
+                    (self.now, wid, tid, placement.tier, placement.est_cost,
+                     placement.vm.vmid if placement.vm else -1)
+                )
+
+    def _schedule_cycle_batched(self, idle: List[VM]) -> None:
+        """Whole-queue scheduling via the JAX affinity kernel + auction
+        (core.jax_cycles).  Matches the sequential outcome exactly while
+        budgets are sufficient (see jax_cycles docstring)."""
+        from .jax_cycles import batched_cycle
+
+        ordered = []
+        while self.queue:
+            ordered.append(heapq.heappop(self.queue))
+        tasks = []
+        metas = []
+        for est, wid, tid in ordered:
+            st = self.wf_state[wid]
+            task = st.wf.tasks[tid]
+            tag = self.policy.owner_tag(wid, st.wf.app)
+            inputs = self._inputs_of(st.wf, task)
+            tasks.append((task, st.wf.app, tag, inputs))
+            metas.append((wid, tid, inputs))
+        placements = batched_cycle(self.cfg, self.policy, tasks, idle,
+                                   self.pool.data_index)
+        remaining = {vm.vmid for vm in idle}
+        for (wid, tid, inputs), p in zip(metas, placements):
+            st = self.wf_state[wid]
+            task = st.wf.tasks[tid]
+            if p is None:
+                pool = [vm for vm in idle if vm.vmid in remaining
+                        and vm.status == VM_IDLE]
+                p = select(self.cfg, self.policy, task, wid, st.wf.app,
+                           inputs, task.budget, pool)
+            st.unscheduled.discard(tid)
+            if p.vm is not None:
+                vm = p.vm
+                vm.status = VM_BUSY
+                remaining.discard(vm.vmid)
+                self.vm_bound[vm.vmid] = (wid, tid)
+                self._start_pipeline(wid, tid, vm, triggered_provision=False)
+            else:
+                tag = self.policy.owner_tag(wid, st.wf.app)
+                vm = self.pool.provision(p.new_vmt_idx, self.now, tag)
+                self.vm_bound[vm.vmid] = (wid, tid)
+                self._push(vm.ready_ms, VM_READY, (vm.vmid,))
+            if self.trace_rows is not None:
+                self.trace_rows.append((self.now, wid, tid, p.tier,
+                                        p.est_cost,
+                                        p.vm.vmid if p.vm else -1))
+
+    # ---- execution pipeline ---------------------------------------------------
+    def _start_pipeline(
+        self, wid: int, tid: int, vm: VM, triggered_provision: bool
+    ) -> None:
+        st = self.wf_state[wid]
+        wf = st.wf
+        task = wf.tasks[tid]
+        gid = self._gid(wid, tid)
+        # 1. container (actual, mutates image cache)
+        c_ms = vm.activate_container(self.cfg, wf.app, self.policy.use_containers)
+        # 2. input staging: only cache-missing bytes travel.
+        inputs = self._inputs_of(wf, task)
+        missing = vm.missing_mb(inputs)
+        in_ms = costs.transfer_in_ms(self.cfg, vm.vmt, missing, self.bw_in_deg[gid])
+        for key, mb in inputs:
+            vm.cache_put(self.cfg, key, mb, self.pool.data_index)
+        # 3. compute (degraded CPU), 4. write-back to global storage.
+        rt_ms = costs.runtime_ms(vm.vmt, task.size_mi, self.cpu_deg[gid])
+        out_ms = costs.transfer_out_ms(
+            self.cfg, vm.vmt, task.out_mb, self.bw_out_deg[gid]
+        )
+        pipe_ms = c_ms + in_ms + rt_ms + out_ms
+        finish = self.now + pipe_ms
+        vm.busy_ms += pipe_ms
+        billed = pipe_ms + (
+            self.cfg.vm_provision_delay_ms if triggered_provision else 0
+        )
+        actual_cost = costs.billed_cost(self.cfg, vm.vmt, billed)
+        run = _Running(wid, tid, vm, triggered_provision, actual_cost)
+        self.running[(wid, tid)] = run
+        self._push(finish, FINISH, (wid, tid))
+
+
+def simulate(
+    cfg: PlatformConfig,
+    policy: Policy,
+    workflows: Sequence[Workflow],
+    seed: int = 0,
+) -> SimResult:
+    """Convenience wrapper: run one simulation."""
+    return SimEngine(cfg, policy, workflows, seed=seed).run()

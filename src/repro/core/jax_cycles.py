@@ -1,0 +1,171 @@
+"""Batched scheduling cycles: Algorithm 2 as a JAX computation.
+
+The sequential reference processes the ready queue task-by-task, scoring
+every idle VM per task (O(T·V) Python).  This module scores ALL pairs at
+once with the affinity kernel (jnp oracle or the Pallas kernel) and
+resolves VM conflicts with an auction: every unplaced task picks its best
+VM; the earliest task in queue order wins each VM; losers retry against
+the shrunken pool.  Because pair scores are static within a cycle (caches
+only change when pipelines start), the fixed point equals the sequential
+outcome exactly — property-tested in tests/test_jax_cycles.py.
+
+Tier encoding per (task, VM): 0 = out of scope (busy/wrong owner),
+1 = all inputs cached, 2 = container active, 3 = idle.  Provisioning
+(tier 4/5) can't conflict and stays in the per-task fallback.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..kernels.affinity import ops as aff_ops
+from ..sim.cloud import VM, VM_IDLE, DataKey
+from .scheduler import Placement, Policy
+from .types import PlatformConfig, Task
+
+
+def build_pair_arrays(cfg: PlatformConfig, policy: Policy,
+                      tasks: Sequence[Tuple[Task, str, object, List]],
+                      vms: Sequence[VM],
+                      data_index: Dict[DataKey, set]):
+    """tasks: [(task, app, owner_tag, inputs)] in queue order."""
+    T, V = len(tasks), len(vms)
+    size = np.empty(T, np.float32)
+    out_mb = np.empty(T, np.float32)
+    budget = np.empty(T, np.float32)
+    missing = np.zeros((T, V), np.float32)
+    cont = np.zeros((T, V), np.float32)
+    tier = np.zeros((T, V), np.int32)
+
+    vm_ids = {vm.vmid: j for j, vm in enumerate(vms)}
+    mips = np.array([vm.vmt.mips for vm in vms], np.float32)
+    bw = np.array([vm.vmt.bandwidth_mbps for vm in vms], np.float32)
+    price = np.array([vm.vmt.cost_per_bp for vm in vms], np.float32)
+
+    # Per-(vm, app) container state, computed once per distinct app.
+    apps = sorted({app for _, app, _, _ in tasks})
+    cont_by_app = {}
+    active = np.array([hash(vm.active_container) if vm.active_container
+                       else 0 for vm in vms])
+    for app in apps:
+        cvec = np.array([vm.container_ms(cfg, app, policy.use_containers)
+                         for vm in vms], np.float32)
+        is_active = np.array([vm.active_container == app for vm in vms],
+                             dtype=bool)
+        cont_by_app[app] = (cvec, is_active)
+
+    for i, (task, app, tag, inputs) in enumerate(tasks):
+        size[i] = task.size_mi
+        out_mb[i] = task.out_mb
+        budget[i] = task.budget
+        scope = np.array([vm.owner_tag == tag for vm in vms], dtype=bool)
+        cvec, is_active = cont_by_app[app]
+        cont[i] = cvec
+        if policy.locality_tiers:
+            have_all = scope.copy()
+            miss = np.zeros(V, np.float32)
+            for key, mb in inputs:
+                holders = data_index.get(key, ())
+                hold = np.zeros(V, bool)
+                for vid in holders:
+                    j = vm_ids.get(vid)
+                    if j is not None:
+                        hold[j] = True
+                miss += np.where(hold, 0.0, mb)
+                if mb > 0:
+                    have_all &= hold
+            missing[i] = miss
+            t = np.where(have_all, 1,
+                         np.where(is_active & policy.use_containers, 2, 3))
+        else:
+            missing[i] = sum(mb for _, mb in inputs)
+            t = np.full(V, 3, np.int32)
+        tier[i] = np.where(scope, t, 0)
+    return (size, out_mb, budget, missing, cont, tier, mips, bw, price)
+
+
+def batched_cycle(cfg: PlatformConfig, policy: Policy,
+                  tasks, vms: Sequence[VM], data_index,
+                  use_pallas: bool = False
+                  ) -> List[Optional[Placement]]:
+    """Returns, per task (queue order), a reuse Placement or None (task
+    needs the provisioning fallback)."""
+    if not tasks:
+        return []
+    if not vms:
+        return [None] * len(tasks)
+    arrays = build_pair_arrays(cfg, policy, tasks, vms, data_index)
+    size, out_mb, budget, missing, cont, tier, mips, bw, price = arrays
+    T, V = tier.shape
+    placements: List[Optional[Placement]] = [None] * T
+    unplaced = list(range(T))
+    avail = np.ones(V, bool)
+
+    # Pad (T, V) to power-of-two buckets so the jitted kernel is reused
+    # across cycles instead of recompiling per shape (padding rows/cols
+    # are tier-0 ⇒ infeasible ⇒ inert).
+    def p2(n: int) -> int:
+        return 1 << max(n - 1, 1).bit_length()
+
+    Vp = p2(V)
+    missing_p, cont_p, tier_p = (np.pad(missing, ((0, 0), (0, Vp - V))),
+                                 np.pad(cont, ((0, 0), (0, Vp - V))),
+                                 np.pad(tier, ((0, 0), (0, Vp - V))))
+    mips_p = np.pad(mips, (0, Vp - V), constant_values=1.0)
+    bw_p = np.pad(bw, (0, Vp - V), constant_values=1.0)
+    price_p = np.pad(price, (0, Vp - V), constant_values=1.0)
+
+    while unplaced and avail.any():
+        Tr = len(unplaced)
+        Tp = p2(Tr)
+        pr = (0, Tp - Tr)
+        avail_p = np.pad(avail, (0, Vp - V))
+        t_eff = np.pad(tier_p[unplaced] * avail_p[None, :].astype(np.int32),
+                       (pr, (0, 0)))
+        res = aff_ops.affinity(
+            np.pad(size[unplaced], pr), np.pad(out_mb[unplaced], pr),
+            np.pad(budget[unplaced], pr, constant_values=-1.0),
+            np.pad(missing_p[unplaced], (pr, (0, 0))),
+            np.pad(cont_p[unplaced], (pr, (0, 0))), t_eff,
+            mips_p, bw_p, price_p,
+            gs_read=cfg.gs_read_mbps, gs_write=cfg.gs_write_mbps,
+            bp_ms=float(cfg.billing_period_ms), use_pallas=use_pallas)
+        best = np.asarray(res.best_vm)[:Tr]
+        tiers = np.asarray(res.best_tier)[:Tr]
+        fins = np.asarray(res.est_finish)[:Tr]
+        costs_ = np.asarray(res.est_cost)[:Tr]
+
+        # Serial-dictatorship prefix commit: the winner of each VM is its
+        # earliest claimant, and only winners EARLIER than the first loser
+        # commit this round.  A later round-1 winner could otherwise steal
+        # the VM an earlier loser takes next — exactly the interleaving
+        # the sequential reference produces.  Tasks with no feasible VM
+        # (best < 0) resolve immediately: their availability set is a
+        # superset of the sequential one (only earlier tasks have
+        # committed), so sequential would provision too.
+        claims: dict = {}
+        for row, ti in enumerate(unplaced):
+            j = int(best[row])
+            if j >= 0 and j not in claims:
+                claims[j] = ti
+        losers = [ti for row, ti in enumerate(unplaced)
+                  if int(best[row]) >= 0 and claims[int(best[row])] != ti]
+        first_loser = min(losers) if losers else None
+        next_unplaced = []
+        committed = False
+        for row, ti in enumerate(unplaced):
+            j = int(best[row])
+            if j < 0:
+                continue  # provisioning fallback (final)
+            if claims[j] == ti and (first_loser is None or ti < first_loser):
+                placements[ti] = Placement(vms[j], None, int(tiers[row]),
+                                           int(fins[row]), float(costs_[row]))
+                avail[j] = False
+                committed = True
+            else:
+                next_unplaced.append(ti)
+        unplaced = next_unplaced
+        if not committed:
+            break
+    return placements

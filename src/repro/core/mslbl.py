@@ -1,0 +1,36 @@
+"""MSLBL_MW — the paper's baseline (Chen et al. MSLBL, extended to multiple
+workflows per Section 5 of the paper).
+
+Budget distribution: compute the workflow *budget level*
+``b = (β − Σ c_min) / (Σ c_max − Σ c_min)`` (clipped to [0,1]) and give each
+task ``c_min + b · (c_max − c_min)`` — a safety-net allocation between the
+cheapest and fastest execution cost.  Leftover sub-budget of a completed task
+rolls over to the next task scheduled (single spare pool per workflow).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from . import costs
+from .budget import execution_order, input_mb
+from .types import PlatformConfig, Workflow
+
+
+def distribute_budget_mslbl(cfg: PlatformConfig, wf: Workflow, budget: float) -> None:
+    order = execution_order(cfg, wf)  # also assigns levels/ranks
+    cheapest = min(cfg.vm_types, key=lambda v: v.mips)
+    fastest = max(cfg.vm_types, key=lambda v: v.mips)
+    c_min: List[float] = []
+    c_max: List[float] = []
+    for t in wf.tasks:
+        mb = input_mb(wf, t)
+        c_min.append(costs.estimate_full_cost(cfg, cheapest, t, mb))
+        c_max.append(costs.estimate_full_cost(cfg, fastest, t, mb))
+    lo, hi = sum(c_min), sum(c_max)
+    if hi - lo < 1e-9:
+        level = 1.0
+    else:
+        level = (budget - lo) / (hi - lo)
+    level = min(max(level, 0.0), 1.0)
+    for t in wf.tasks:
+        t.budget = c_min[t.tid] + level * (c_max[t.tid] - c_min[t.tid])

@@ -1,0 +1,246 @@
+"""Core entity types for the WaaS platform simulation.
+
+Times are integer **milliseconds** throughout (exact arithmetic, identical
+between the Python reference engine and the jitted JAX engine).  Money is in
+float cents; task sizes in MI (million instructions); data sizes in MB.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+MS = 1000  # ms per second
+
+
+# ---------------------------------------------------------------------------
+# Infrastructure catalogue
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VMType:
+    """An IaaS VM offering (Table 2 of the paper)."""
+
+    name: str
+    mips: float           # processing capacity p_vmt (MIPS)
+    storage_mb: float     # local storage LS capacity
+    cost_per_bp: float    # c_vmt, cents per billing period
+    bandwidth_mbps: float  # b_vmt, MB/s (≈ same across types per the paper)
+
+
+# The paper's Table 2 (c4-like, price linear in CPU), per-second billing.
+PAPER_VM_TYPES: Tuple[VMType, ...] = (
+    VMType("small", 2.0, 20 * 1024, 1.0, 20.0),
+    VMType("medium", 4.0, 40 * 1024, 2.0, 20.0),
+    VMType("large", 8.0, 80 * 1024, 4.0, 20.0),
+    VMType("xlarge", 16.0, 160 * 1024, 8.0, 20.0),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformConfig:
+    """Environment constants (paper Section 5 defaults)."""
+
+    vm_types: Tuple[VMType, ...] = PAPER_VM_TYPES
+    billing_period_ms: int = 1 * MS          # per-second billing
+    vm_provision_delay_ms: int = 45 * MS     # Ulrich et al. benchmark
+    container_download_ms: int = 9_600       # 600 MB at 500 Mbps
+    container_init_ms: int = 400             # Piraghaj et al. model
+    gs_read_mbps: float = 50.0               # global storage read rate GS_r
+    gs_write_mbps: float = 30.0              # global storage write rate GS_w
+    provision_interval_ms: int = 1 * MS      # Alg. 4 monitor period prov_int
+    idle_threshold_ms: int = 5 * MS          # Alg. 4 threshold_idle (EBPSM)
+    # Leitner & Cito performance-variation model.
+    cpu_degradation_mean: float = 0.12
+    cpu_degradation_std: float = 0.10
+    cpu_degradation_max: float = 0.24
+    bw_degradation_mean: float = 0.095
+    bw_degradation_std: float = 0.05
+    bw_degradation_max: float = 0.19
+    # Fixed-capacity limits for the vectorized engine.
+    max_vms: int = 1024
+    cache_slots: int = 64                    # FIFO data-cache entries per VM
+    image_slots: int = 8                     # FIFO container-image entries
+
+    @property
+    def container_provision_ms(self) -> int:
+        """prov_c — full container provisioning (download + init)."""
+        return self.container_download_ms + self.container_init_ms
+
+    def with_(self, **kw) -> "PlatformConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Application model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Task:
+    """A workflow task.
+
+    ``parents``/``children`` index into the owning workflow's task list.
+    ``out_mb`` is the size of this task's output dataset d_t^out; a child
+    reads every parent's output as its input d_t^in.  ``ext_in_mb`` models
+    initial input staged from global storage (entry tasks).
+    """
+
+    tid: int
+    size_mi: float
+    out_mb: float
+    ext_in_mb: float = 0.0
+    parents: List[int] = dataclasses.field(default_factory=list)
+    children: List[int] = dataclasses.field(default_factory=list)
+    # Cross-workflow shared inputs [(name, mb)] — e.g. a base-model
+    # checkpoint shared by every tenant fine-tuning the same arch (WaaS→ML
+    # bridge).  Cache keys are global: ("shared", name, 0).
+    shared_in: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list)
+
+    # Filled in by budget distribution / scheduling.
+    level: int = 0
+    rank: int = 0                 # position in estimated execution order S
+    budget: float = 0.0           # current sub-budget allocation
+
+
+@dataclasses.dataclass
+class Workflow:
+    """A tenant job: a DAG of tasks plus a soft budget constraint."""
+
+    wid: int
+    app: str                      # application type == container image id
+    tasks: List[Task]
+    budget: float = 0.0
+    arrival_ms: int = 0
+
+    def entry_tasks(self) -> List[int]:
+        return [t.tid for t in self.tasks if not t.parents]
+
+    def exit_tasks(self) -> List[int]:
+        return [t.tid for t in self.tasks if not t.children]
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.tasks)
+
+    def validate(self) -> None:
+        """Sanity-check DAG structure (used by tests and generators)."""
+        n = len(self.tasks)
+        for t in self.tasks:
+            assert 0 <= t.tid < n
+            for p in t.parents:
+                assert 0 <= p < n and t.tid in self.tasks[p].children
+            for c in t.children:
+                assert 0 <= c < n and t.tid in self.tasks[c].parents
+        # Acyclicity via Kahn's algorithm.
+        indeg = [len(t.parents) for t in self.tasks]
+        stack = [i for i, d in enumerate(indeg) if d == 0]
+        seen = 0
+        while stack:
+            u = stack.pop()
+            seen += 1
+            for c in self.tasks[u].children:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    stack.append(c)
+        assert seen == n, "workflow DAG has a cycle"
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WorkflowResult:
+    wid: int
+    app: str
+    n_tasks: int
+    budget: float
+    cost: float
+    arrival_ms: int
+    finish_ms: int
+
+    @property
+    def makespan_ms(self) -> int:
+        return self.finish_ms - self.arrival_ms
+
+    @property
+    def budget_met(self) -> bool:
+        return self.cost <= self.budget + 1e-6
+
+    @property
+    def cost_budget_ratio(self) -> float:
+        return self.cost / max(self.budget, 1e-9)
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Aggregate output of one simulation run."""
+
+    workflows: List[WorkflowResult]
+    vm_seconds_by_type: Dict[str, float]
+    vm_busy_seconds_by_type: Dict[str, float]
+    vm_count_by_type: Dict[str, int]
+    total_events: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def avg_vm_utilization(self) -> float:
+        lease = sum(self.vm_seconds_by_type.values())
+        busy = sum(self.vm_busy_seconds_by_type.values())
+        return busy / lease if lease > 0 else 0.0
+
+    @property
+    def total_vms(self) -> int:
+        return sum(self.vm_count_by_type.values())
+
+    @property
+    def budget_met_fraction(self) -> float:
+        if not self.workflows:
+            return 1.0
+        return sum(w.budget_met for w in self.workflows) / len(self.workflows)
+
+    def makespans_by_app(self) -> Dict[str, List[int]]:
+        out: Dict[str, List[int]] = {}
+        for w in self.workflows:
+            out.setdefault(w.app, []).append(w.makespan_ms)
+        return out
+
+    def violated_ratios(self) -> List[float]:
+        return [w.cost_budget_ratio for w in self.workflows if not w.budget_met]
+
+
+# ---------------------------------------------------------------------------
+# Deterministic performance-variation draws
+# ---------------------------------------------------------------------------
+
+
+def degradation_tables(
+    cfg: PlatformConfig, n_tasks: int, seed: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pre-draw per-task CPU and bandwidth degradation factors.
+
+    Returns (cpu_deg, bw_in_deg, bw_out_deg) arrays in [0, max]; both engines
+    consume the same tables so results are bit-identical.
+    """
+    rng = np.random.default_rng(seed)
+    cpu = np.clip(
+        rng.normal(cfg.cpu_degradation_mean, cfg.cpu_degradation_std, n_tasks),
+        0.0,
+        cfg.cpu_degradation_max,
+    )
+    bw_in = np.clip(
+        rng.normal(cfg.bw_degradation_mean, cfg.bw_degradation_std, n_tasks),
+        0.0,
+        cfg.bw_degradation_max,
+    )
+    bw_out = np.clip(
+        rng.normal(cfg.bw_degradation_mean, cfg.bw_degradation_std, n_tasks),
+        0.0,
+        cfg.bw_degradation_max,
+    )
+    return cpu.astype(np.float64), bw_in.astype(np.float64), bw_out.astype(np.float64)

@@ -1,0 +1,105 @@
+"""Pallas kernel for the EBPSM task×VM affinity argmin (Alg. 2 inner loop).
+
+At WaaS scale (1000 workflows ≈ 170k tasks, pools of hundreds of VMs) the
+O(T·V) scoring loop dominates scheduler runtime.  The kernel tiles tasks
+into blocks of ``bt`` and keeps the whole VM axis resident in VMEM
+(V ≤ 2048 → a [bt, V] f32 tile is ≤ 64 KB at bt = 8): one grid step
+computes Eqs. (1)-(5) for bt·V pairs and the three-stage lexicographic
+reduction ((tier, finish, vmid) argmin) entirely on-chip, so HBM traffic
+is one read of the pair features and a [bt]-sized write.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38
+MS = 1000.0
+
+
+def _affinity_kernel(size_ref, out_ref, bud_ref, miss_ref, cont_ref, tier_ref,
+                     mips_ref, bw_ref, price_ref, scal_ref,
+                     vm_ref, tierout_ref, fin_ref, cost_ref):
+    gs_read, gs_write, bp_ms = scal_ref[0], scal_ref[1], scal_ref[2]
+    size = size_ref[...]            # [bt]
+    out_mb = out_ref[...]
+    budget = bud_ref[...]
+    miss = miss_ref[...]            # [bt, V]
+    cont = cont_ref[...]
+    tier = tier_ref[...]
+    mips = mips_ref[...]            # [V]
+    bw = bw_ref[...]
+    price = price_ref[...]
+
+    TOL = 1.0 - 1e-6   # tolerance-ceil; see core.costs.ceil_ms
+    in_ms = miss * (1.0 / bw[None, :] + 1.0 / gs_read) * MS
+    o_ms = out_mb[:, None] * (1.0 / bw[None, :] + 1.0 / gs_write) * MS
+    rt_ms = size[:, None] / mips[None, :] * MS
+    pipe = (jnp.ceil(in_ms * TOL) + jnp.ceil(rt_ms * TOL)
+            + jnp.ceil(o_ms * TOL) + cont)
+    cost = jnp.ceil(pipe / bp_ms) * price[None, :]
+
+    feas = (tier > 0) & (cost <= budget[:, None] + 1e-6)
+    t_eff = jnp.where(feas, tier, 9)
+    best_t = jnp.min(t_eff, axis=1)                        # [bt]
+    f_eff = jnp.where(t_eff == best_t[:, None], pipe, BIG)
+    best_f = jnp.min(f_eff, axis=1)
+    V = tier.shape[1]
+    vmids = jax.lax.broadcasted_iota(jnp.int32, (tier.shape[0], V), 1)
+    v_eff = jnp.where(f_eff == best_f[:, None], vmids, 1 << 30)
+    best_v = jnp.min(v_eff, axis=1)
+    none = best_t >= 9
+    vm_ref[...] = jnp.where(none, -1, best_v)
+    tierout_ref[...] = best_t
+    idx = jnp.clip(best_v, 0, V - 1)
+    onehot = (vmids == idx[:, None]).astype(jnp.float32)
+    fin_ref[...] = jnp.where(none, BIG, jnp.sum(pipe * onehot, axis=1))
+    cost_ref[...] = jnp.where(none, BIG, jnp.sum(cost * onehot, axis=1))
+
+
+def affinity_pallas(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+                    vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
+                    bp_ms: float, bt: int = 8, interpret: bool = True):
+    T, V = missing_mb.shape
+    tp = math.ceil(T / bt) * bt
+    padT = lambda a: jnp.pad(a, ((0, tp - T),) + ((0, 0),) * (a.ndim - 1))
+    size_mi, out_mb, budget = map(padT, (size_mi, out_mb, budget))
+    missing_mb, cont_ms = padT(missing_mb), padT(cont_ms)
+    tier = padT(tier)
+    scal = jnp.array([gs_read, gs_write, bp_ms], jnp.float32)
+    grid = (tp // bt,)
+    outs = pl.pallas_call(
+        _affinity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt, V), lambda i: (i, 0)),
+            pl.BlockSpec((bt, V), lambda i: (i, 0)),
+            pl.BlockSpec((bt, V), lambda i: (i, 0)),
+            pl.BlockSpec((V,), lambda i: (0,)),
+            pl.BlockSpec((V,), lambda i: (0,)),
+            pl.BlockSpec((V,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp,), jnp.int32),
+            jax.ShapeDtypeStruct((tp,), jnp.int32),
+            jax.ShapeDtypeStruct((tp,), jnp.float32),
+            jax.ShapeDtypeStruct((tp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+      vm_mips, vm_bw, vm_price, scal)
+    return tuple(o[:T] for o in outs)

@@ -1,0 +1,28 @@
+"""jit'd dispatcher for the affinity scoring: Pallas kernel or jnp oracle."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import affinity_pallas
+from .ref import AffinityOut, affinity_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("gs_read", "gs_write", "bp_ms", "use_pallas"))
+def affinity(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+             vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
+             bp_ms: float, use_pallas: bool = False) -> AffinityOut:
+    if use_pallas:
+        vm, t, f, c = affinity_pallas(
+            size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+            vm_mips, vm_bw, vm_price, gs_read, gs_write, bp_ms,
+            interpret=_default_interpret())
+        return AffinityOut(vm, t, f, c)
+    return affinity_ref(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+                        vm_mips, vm_bw, vm_price, gs_read, gs_write, bp_ms)

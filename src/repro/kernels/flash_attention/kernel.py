@@ -1,0 +1,109 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Online-softmax tiling: grid = (B, H, num_q_blocks, num_k_blocks); the last
+grid axis is sequential on TPU, so the output block for a given (b, h, i)
+is *revisited* across k-blocks and serves as the VMEM accumulator.  Running
+max ``m`` and normalizer ``l`` live in two small side outputs revisited the
+same way.  Block shapes are MXU-aligned (multiples of 128 on the q/k tile
+dims); the D (head) dim rides along whole.
+
+VMEM budget per grid step ≈ (bq·D + bk·D·2 + bq·bk + bq·D) · 4B fp32;
+with bq = bk = 128, D ≤ 256 that is < 1 MB — far under the ~16 MB/core
+VMEM of TPU v5e, leaving room for double-buffered pipelining.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+               causal: bool, scale: float, bq: int, bk: int, lk: int,
+               lq_orig: int, lk_orig: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)          # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)          # [bk, D]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    s = (q @ k.T) * scale                        # [bq, bk]
+    qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    ki = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = ki < lk_orig                           # padding mask
+    if causal:
+        mask = mask & ((qi + (lk_orig - lq_orig)) >= ki)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]                          # [bq]
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)               # rescale of old accumulator
+    p = jnp.exp(s - m_new[:, None])               # [bq, bk]
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    o_ref[0, 0, :, :] = o_ref[0, 0, :, :] * alpha[:, None] + p @ v
+    m_ref[0, 0, :] = m_new
+    l_ref[0, 0, :] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[0, 0]
+        o_ref[0, 0, :, :] = o_ref[0, 0, :, :] / jnp.maximum(l, 1e-30)[:, None]
+
+
+def flash_attention_bhld(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         causal: bool = True, bq: int = 128, bk: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """q,k,v: [B, H, L, D] → [B, H, Lq, D].  Pads L to block multiples."""
+    B, H, Lq, D = q.shape
+    Lk = k.shape[2]
+    bq = min(bq, max(8, 1 << (Lq - 1).bit_length()))
+    bk = min(bk, max(8, 1 << (Lk - 1).bit_length()))
+    lq_pad = math.ceil(Lq / bq) * bq
+    lk_pad = math.ceil(Lk / bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, lq_pad - Lq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, lk_pad - Lk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, lk_pad - Lk), (0, 0)))
+    grid = (B, H, lq_pad // bq, lk_pad // bk)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, scale=scale, bq=bq, bk=bk, lk=lk_pad,
+        lq_orig=Lq, lk_orig=Lk,
+    )
+    o, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, lq_pad, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, lq_pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, lq_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return o[:, :, :Lq, :].astype(q.dtype)

@@ -1,0 +1,29 @@
+"""jit-ready wrapper for flash attention; [B, L, H, D] layout like layers.py.
+
+On CPU (this container) the kernel runs in interpret mode; on TPU set
+``interpret=False`` (the default flips automatically on TPU backends).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhld
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q,k,v: [B, L, H, D] → [B, Lq, H, D]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = flash_attention_bhld(qt, kt, vt, causal=causal, bq=bq, bk=bk,
+                             interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)

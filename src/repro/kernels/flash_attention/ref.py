@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """q,k,v: [B, L, H, D] (Lk may differ from Lq).  fp32 softmax."""
+    D = q.shape[-1]
+    Lq, Lk = q.shape[1], k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(Lq)[:, None] + (Lk - Lq)
+        ki = jnp.arange(Lk)[None, :]
+        logits = jnp.where((qi >= ki)[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the SSD intra-chunk block + chunk-state production.
+
+Grid = (B, H, num_chunks).  Each step loads one chunk of one head into VMEM:
+x [Q,P], dt/cum [Q], B/C [Q,N] — with Q = 64..256, P = 64, N = 128 the
+working set is ≈ (Q·P + 2·Q·N + Q·Q)·4 B ≲ 0.5 MB, and the two matmuls
+(C·Bᵀ: [Q,N]×[N,Q]; w·x: [Q,Q]×[Q,P]) land on the MXU with 128-aligned
+contraction dims.
+
+The sequential inter-chunk state carry is NOT in the kernel — it is a
+cheap [B,H,N,P] scan done in jnp by ops.py (O(nc) adds, bandwidth-trivial),
+which keeps the kernel grid embarrassingly parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref,
+                      y_ref, state_ref, *, chunk: int):
+    x = x_ref[0, 0, 0].astype(jnp.float32)         # [Q, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)       # [Q]
+    cum = cum_ref[0, 0, 0].astype(jnp.float32)     # [Q]
+    Bm = b_ref[0, 0].astype(jnp.float32)           # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)           # [Q, N]
+
+    seg = cum[:, None] - cum[None, :]              # [Q(i), Q(j)]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = Cm @ Bm.T                                 # [Q, Q]  (MXU)
+    w = cb * decay * dt[None, :]
+    y_ref[0, 0, 0, :, :] = w @ x                   # [Q, P]  (MXU)
+
+    dec_end = jnp.exp(cum[-1] - cum) * dt          # [Q]
+    state_ref[0, 0, 0, :, :] = Bm.T @ (x * dec_end[:, None])  # [N, P] (MXU)
+
+
+def ssd_chunks(x: jnp.ndarray, dt: jnp.ndarray, cum: jnp.ndarray,
+               Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+               interpret: bool = True):
+    """Intra-chunk pass.
+
+    x: [B,L,H,P]; dt,cum: [B,L,H]; Bm,Cm: [B,L,N] → (y_intra [B,L,H,P],
+    states [B,nc,H,N,P]) where states lack the inter-chunk carry.
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    # Layout: [B, H, nc, Q, ...] so each grid step reads a contiguous block.
+    xt = jnp.transpose(x.reshape(Bsz, nc, chunk, H, P), (0, 3, 1, 2, 4))
+    dtt = jnp.transpose(dt.reshape(Bsz, nc, chunk, H), (0, 3, 1, 2))
+    cumt = jnp.transpose(cum.reshape(Bsz, nc, chunk, H), (0, 3, 1, 2))
+    bt = Bm.reshape(Bsz, nc, chunk, N)
+    ct = Cm.reshape(Bsz, nc, chunk, N)
+
+    grid = (Bsz, H, nc)
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_chunk_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, H, nc, chunk, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, nc, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, dtt, cumt, bt, ct)
+    y = jnp.transpose(y, (0, 2, 3, 1, 4)).reshape(Bsz, L, H, P)
+    st = jnp.transpose(st, (0, 2, 1, 3, 4))       # [B, nc, H, N, P]
+    return y, st

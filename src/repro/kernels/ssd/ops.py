@@ -1,0 +1,60 @@
+"""Dispatcher for the SSD scan: Pallas kernel (intra-chunk) + jnp carry,
+or the pure-jnp reference — bit-compatible shapes either way.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunks
+from .ref import ssd_decode_ref, ssd_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, Bm: jnp.ndarray,
+        Cm: jnp.ndarray, chunk: int = 64, use_pallas: bool = False,
+        init_state: jnp.ndarray | None = None,
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """See ref.ssd_ref for shapes."""
+    if not use_pallas:
+        return ssd_ref(x, dt, A, Bm, Cm, chunk=chunk, init_state=init_state)
+
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    f32 = jnp.float32
+    a = dt.astype(f32) * A.astype(f32)[None, None, :]
+    cum = jnp.cumsum(a.reshape(Bsz, nc, chunk, H), axis=2).reshape(Bsz, L, H)
+
+    y_intra, Sc = ssd_chunks(x, dt, cum, Bm, Cm, chunk,
+                             interpret=_default_interpret())
+
+    cumc = cum.reshape(Bsz, nc, chunk, H)
+    chunk_decay = jnp.exp(cumc[:, :, -1, :])      # [B,nc,H]
+
+    def step(h, inp):
+        s_c, dec = inp
+        h_prev = h
+        h = dec[:, :, None, None] * h + s_c
+        return h, h_prev
+
+    h0 = (jnp.zeros((Bsz, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+    final, h_prevs = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)
+
+    Cc = Cm.astype(f32).reshape(Bsz, nc, chunk, N)
+    y_inter = jnp.einsum("bcih,bcin,bchnp->bcihp", jnp.exp(cumc), Cc, h_prevs)
+    y = y_intra.reshape(Bsz, nc, chunk, H, P) + y_inter
+    return y.reshape(Bsz, L, H, P).astype(x.dtype), final
+
+
+def ssd_decode(x, dt, A, Bm, Cm, state):
+    return ssd_decode_ref(x, dt, A, Bm, Cm, state)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) chunked scan.
+
+Computes, per head h with scalar decay ``a_t = dt_t * A_h`` (A < 0):
+
+    s_t = exp(a_t) * s_{t-1} + dt_t * B_t ⊗ x_t          (state  [N, P])
+    y_t = C_t · s_t                                       (output [P])
+
+via the SSD chunk decomposition: intra-chunk "masked attention" term +
+inter-chunk state carry, exactly the structure the Pallas kernel tiles.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int = 64,
+            init_state: jnp.ndarray | None = None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,L,H,P]; dt: [B,L,H] (>0); A: [H] (<0); Bm,Cm: [B,L,N].
+
+    Returns (y [B,L,H,P], final_state [B,H,N,P]).  fp32 internally.
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    f32 = jnp.float32
+    orig_dtype = x.dtype
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    Bm = Bm.astype(f32)
+    Cm = Cm.astype(f32)
+    a = dt * A.astype(f32)[None, None, :]                     # [B,L,H] (<0)
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    ac = a.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    cum = jnp.cumsum(ac, axis=2)                              # [B,nc,Q,H]
+    # Intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i·B_j) x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # [B,nc,Q(i),Q(j),H]
+    iota = jnp.arange(chunk)
+    causal = (iota[:, None] >= iota[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # [B,nc,Q,Q]
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]         # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # Chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)                # [B,nc,Q,H]
+    Sc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                    dec_end * dtc, Bc, xc)                    # [B,nc,H,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # [B,nc,H]
+
+    # Inter-chunk scan over chunk states.
+    def step(h, inp):
+        s_c, dec = inp                                        # [B,H,N,P],[B,H]
+        h_prev = h
+        h = dec[:, :, None, None] * h + s_c
+        return h, h_prev
+
+    h0 = (jnp.zeros((Bsz, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+    final, h_prevs = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # [B,nc,H,N,P]
+
+    # Inter-chunk contribution: y_i += exp(cum_i) C_i · h_prev
+    y_inter = jnp.einsum("bcih,bcin,bchnp->bcihp",
+                         jnp.exp(cum), Cc, h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y.astype(orig_dtype), final
+
+
+def ssd_decode_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   Bm: jnp.ndarray, Cm: jnp.ndarray, state: jnp.ndarray,
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence.  x: [B,H,P]; dt: [B,H]; Bm,Cm: [B,N];
+    state: [B,H,N,P] → (y [B,H,P], new_state)."""
+    f32 = jnp.float32
+    a = dt.astype(f32) * A.astype(f32)[None, :]
+    dec = jnp.exp(a)[:, :, None, None]
+    upd = jnp.einsum("bn,bhp->bhnp", Bm.astype(f32),
+                     dt.astype(f32)[..., None] * x.astype(f32))
+    new = dec * state.astype(f32) + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(f32), new)
+    return y.astype(x.dtype), new

@@ -1,0 +1,1 @@
+"""Launcher: mesh, dry-run, train/serve drivers."""

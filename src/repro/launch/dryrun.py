@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+# production meshes with ShapeDtypeStruct stand-ins (no allocation), then
+# record memory/cost/collective artifacts for the roofline analysis.
+#
+# MUST be executed as its own process (``python -m repro.launch.dryrun``):
+# the XLA_FLAGS line above runs before any jax import, giving 512
+# placeholder host devices.  Smoke tests / benches are separate processes
+# and see 1 device.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+#   python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ARCH_IDS, cells, get_config
+from ..configs.shapes import SHAPES, skip_reason
+from ..models.common import RunConfig
+from ..models.registry import build
+from ..parallel import sharding as shd
+from ..serve.serve_step import build_decode_step, build_prefill
+from ..train.optim import init_opt_state
+from ..train.train_step import build_train_step
+from .mesh import make_production_mesh, mesh_desc
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-shape bytes of every collective in the optimized HLO.
+
+    The compiled module is the per-device SPMD program, so these are
+    per-device (wire-side approximation) bytes.
+    """
+    dt_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+    out: Dict[str, Dict[str, float]] = {
+        op: {"count": 0, "bytes": 0.0} for op in COLLECTIVE_OPS}
+    # e.g.:  %all-reduce.5 = f32[16,128]{1,0} all-reduce(...)
+    pat = re.compile(
+        r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start)?\(")
+    for m in pat.finditer(hlo):
+        tuple_types, dt, dims, op = m.groups()
+        nbytes = 0.0
+        if tuple_types:
+            for part in tuple_types.split(","):
+                mm = re.match(r"\s*(\w+)\[([\d,]*)\]", part)
+                if not mm:
+                    continue
+                d, shape = mm.groups()
+                n = 1
+                for s in shape.split(","):
+                    if s:
+                        n *= int(s)
+                nbytes += n * dt_bytes.get(d, 4)
+        else:
+            n = 1
+            for s in (dims or "").split(","):
+                if s:
+                    n *= int(s)
+            nbytes = n * dt_bytes.get(dt, 4)
+        out[op]["count"] += 1
+        out[op]["bytes"] += nbytes
+    return out
+
+
+def _lower_model(model, mesh, shape_name: str):
+    """Lower the right entry point for the cell's shape kind."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        fn, *_ = build_train_step(model, mesh, shape_name, donate=True)
+        params_abs = model.abstract()
+        opt_abs = {"mu": params_abs, "nu": params_abs,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        return fn.lower(params_abs, opt_abs, model.input_specs(shape_name))
+    if shape.kind == "prefill":
+        fn, *_ = build_prefill(model, mesh, shape_name)
+        return fn.lower(model.abstract(jnp.bfloat16),
+                        model.input_specs(shape_name))
+    fn, *_ = build_decode_step(model, mesh, shape_name)
+    return fn.lower(model.abstract(jnp.bfloat16),
+                    model.state_specs(shape_name),
+                    model.input_specs(shape_name)["tokens"])
+
+
+def _costs_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "coll_bytes": sum(v["bytes"] for v in coll.values()),
+            "collectives": coll}
+
+
+def _probe_costs(model, mesh, shape_name: str) -> Dict[str, Any]:
+    """XLA's cost analysis counts a while-loop (layer scan) body ONCE.
+
+    Probe: compile the model UNROLLED at two shallow depths (k, 2k layers)
+    and extrapolate linearly in depth — exact for a homogeneous stack, and
+    k = attn_every keeps the hybrid's shared-block cadence intact.
+    """
+    cfg = model.cfg
+    k = max(cfg.attn_every, 2) if cfg.attn_every else 2
+    run = model.run.with_(scan_layers=False)
+    probes = {}
+    for L in (k, 2 * k):
+        from ..models.registry import Model as _Model
+        pm = _Model(arch=model.arch, cfg=cfg.with_(n_layers=L), run=run)
+        compiled = _lower_model(pm, mesh, shape_name).compile()
+        probes[L] = _costs_of(compiled)
+    L_full = cfg.n_layers
+    out: Dict[str, Any] = {"probe_layers": [k, 2 * k]}
+    for key in ("flops", "bytes", "coll_bytes"):
+        b = (probes[2 * k][key] - probes[k][key]) / k
+        a = probes[k][key] - k * b
+        out[key] = a + b * L_full
+        out[f"{key}_per_layer"] = b
+    # collective op counts extrapolated the same way
+    ops: Dict[str, Dict[str, float]] = {}
+    for op in COLLECTIVE_OPS:
+        b_c = (probes[2 * k]["collectives"][op]["count"]
+               - probes[k]["collectives"][op]["count"]) / k
+        a_c = probes[k]["collectives"][op]["count"] - k * b_c
+        b_b = (probes[2 * k]["collectives"][op]["bytes"]
+               - probes[k]["collectives"][op]["bytes"]) / k
+        a_b = probes[k]["collectives"][op]["bytes"] - k * b_b
+        ops[op] = {"count": max(a_c + b_c * L_full, 0.0),
+                   "bytes": max(a_b + b_b * L_full, 0.0)}
+    out["collectives"] = ops
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               run: Optional[RunConfig] = None,
+               probe: bool = True) -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline artifact dict."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    run = run or RunConfig(remat="full")
+    model = build(arch, run)
+
+    t0 = time.time()
+    lowered = _lower_model(model, mesh, shape_name)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    raw = _costs_of(compiled)
+
+    art: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": mesh_desc(mesh),
+        "mesh_tag": "multipod" if multi_pod else "singlepod",
+        "n_params": model.n_params(),
+        "n_active_params": model.n_active_params(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "raw_scan_costs": {k: raw[k] for k in ("flops", "bytes",
+                                               "coll_bytes")},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+    }
+    if probe:
+        p = _probe_costs(model, mesh, shape_name)
+        art["flops_per_device"] = p["flops"]
+        art["bytes_accessed_per_device"] = p["bytes"]
+        art["collective_bytes_per_device"] = p["coll_bytes"]
+        art["collectives"] = p["collectives"]
+        art["probe_layers"] = p["probe_layers"]
+    else:
+        art["flops_per_device"] = raw["flops"]
+        art["bytes_accessed_per_device"] = raw["bytes"]
+        art["collective_bytes_per_device"] = raw["coll_bytes"]
+        art["collectives"] = raw["collectives"]
+    return art
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    # §Perf hillclimb variant knobs (tagged artifacts, never overwrite base)
+    ap.add_argument("--tag", default=None,
+                    help="variant tag appended to artifact names")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence parallelism")
+    ap.add_argument("--cast-once", action="store_true",
+                    help="bf16-cast params once per step (bf16 gathers)")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    todo = []
+    if args.all:
+        todo = [(a, s.name) for a, s, reason in cells() if reason is None]
+        skips = [(a, s.name, r) for a, s, r in cells() if r is not None]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+        skips = []
+
+    os.makedirs(args.out, exist_ok=True)
+    run = RunConfig(remat=args.remat, seq_parallel=not args.no_sp,
+                    cast_params_once=args.cast_once,
+                    microbatch=args.microbatch,
+                    moe_capacity=args.capacity_factor)
+    failures = []
+    for mp in meshes:
+        tag = "multipod" if mp else "singlepod"
+        if args.tag:
+            tag = f"{tag}-{args.tag}"
+        for arch, shape in todo:
+            key = f"{tag}__{arch}__{shape}"
+            path = os.path.join(args.out, key + ".json")
+            if os.path.exists(path):
+                print(f"[skip-cached] {key}")
+                continue
+            print(f"[dryrun] {key} ...", flush=True)
+            try:
+                art = lower_cell(arch, shape, mp, run)
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1)
+                mem_gb = sum(art["memory"].values()) / 2**30
+                print(f"  ok: compile={art['compile_s']}s "
+                      f"flops/dev={art['flops_per_device']:.3e} "
+                      f"mem/dev={mem_gb:.2f}GiB "
+                      f"coll/dev={art['collective_bytes_per_device']:.3e}B",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((key, repr(e)))
+                print(f"  FAIL: {e}\n{traceback.format_exc()}", flush=True)
+        for arch, shape, reason in skips:
+            path = os.path.join(args.out, f"{tag}__{arch}__{shape}.json")
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh_tag": tag,
+                           "skipped": reason}, f, indent=1)
+    if failures:
+        print("FAILURES:")
+        for k, e in failures:
+            print(" ", k, e)
+        raise SystemExit(1)
+    print("dry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,317 @@
+"""SSM decoder LMs: pure Mamba2 (mamba2-780m) and the Zamba2-style hybrid
+(Mamba2 stack + ONE weight-shared attention block applied every
+``attn_every`` layers, each application with its own KV cache).
+
+``attn_every = 0`` → pure SSM.  Both support O(1)-state decode, which is
+why these two archs run the long_500k shape (sub-quadratic requirement).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, RunConfig, spec, stacked
+from .layers import (attention, attn_specs, cross_entropy, decode_attention,
+                     embed, embed_specs, logits_out, mlp, mlp_specs, rmsnorm)
+from .ssm import (init_ssm_state, ssm_block, ssm_block_decode, ssm_specs,
+                  ssm_state_specs)
+from .transformer import _remat
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return 0 if not cfg.attn_every else cfg.n_layers // cfg.attn_every
+
+
+def hybrid_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    per_layer = {"ln": spec((cfg.d_model,), (None,), init="ones"),
+                 "ssm": ssm_specs(cfg)}
+    s: Dict[str, Any] = {
+        "embed": embed_specs(cfg),
+        "layers": jax.tree.map(lambda sp: stacked(cfg.n_layers, sp), per_layer,
+                               is_leaf=lambda x: hasattr(x, "axes")),
+        "ln_f": spec((cfg.d_model,), (None,), init="ones"),
+    }
+    if cfg.attn_every:
+        # Zamba2's shared block is a full transformer block (attn + MLP),
+        # ONE weight set applied at every attn_every-th layer.
+        s["shared_attn"] = {"ln": spec((cfg.d_model,), (None,), init="ones"),
+                            "attn": attn_specs(cfg),
+                            "ln2": spec((cfg.d_model,), (None,), init="ones"),
+                            "mlp": mlp_specs(cfg)}
+    return s
+
+
+def _shared_block(sa, x: jnp.ndarray, positions, cfg: ModelConfig,
+                  run: RunConfig) -> jnp.ndarray:
+    x = x + attention(sa["attn"], rmsnorm(x, sa["ln"], cfg.rms_eps),
+                      positions, cfg, run)
+    return x + mlp(sa["mlp"], rmsnorm(x, sa["ln2"], cfg.rms_eps), run)
+
+
+def _is_attn_layer(cfg: ModelConfig, i: jnp.ndarray) -> jnp.ndarray:
+    return (i % cfg.attn_every) == (cfg.attn_every - 1)
+
+
+def forward(params, batch, cfg: ModelConfig, run: RunConfig) -> jnp.ndarray:
+    h = embed(params["embed"], batch["tokens"], run)
+    B, L = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    from ..parallel.ctx import constrain
+
+    def base(hh, lp):
+        hh = constrain(hh, ("batch", "seq_act", None))
+        return hh + ssm_block(lp["ssm"], rmsnorm(hh, lp["ln"], cfg.rms_eps),
+                              cfg, run)
+
+    if cfg.attn_every:
+        sa = params["shared_attn"]
+
+        def body(hh, xs):
+            lp, i = xs
+            hh = base(hh, lp)
+            hh = jax.lax.cond(
+                _is_attn_layer(cfg, i),
+                lambda x: _shared_block(sa, x, positions, cfg, run),
+                lambda x: x, hh)
+            return hh, None
+    else:
+        def body(hh, xs):
+            lp, _ = xs
+            return base(hh, lp), None
+
+    if run.scan_layers:
+        body = _remat(body, run)
+        h, _ = jax.lax.scan(
+            body, h,
+            (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    else:   # unrolled (cost probes)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h = base(h, lp)
+            if cfg.attn_every and (i % cfg.attn_every) == cfg.attn_every - 1:
+                h = _shared_block(params["shared_attn"], h, positions, cfg,
+                                  run)
+    h = rmsnorm(h, params["ln_f"], cfg.rms_eps)
+    return logits_out(params["embed"], h, cfg, run)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, run: RunConfig):
+    logits = forward(params, batch, cfg, run)
+    mask = batch.get("mask")
+    m = None if mask is None else mask[:, 1:]
+    loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:], m)
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def state_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                state_dtype=jnp.float32) -> Dict[str, Any]:
+    s: Dict[str, Any] = dict(ssm_state_specs(cfg, batch, cfg.n_layers,
+                                             state_dtype))
+    apps = n_attn_apps(cfg)
+    if apps:
+        hd = cfg.hd
+        s["k"] = jax.ShapeDtypeStruct(
+            (apps, batch, max_seq, cfg.n_kv_heads, hd), jnp.bfloat16)
+        s["v"] = jax.ShapeDtypeStruct(
+            (apps, batch, max_seq, cfg.n_kv_heads, hd), jnp.bfloat16)
+    s["length"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return s
+
+
+def init_state(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    return {k: jnp.zeros(v.shape, v.dtype)
+            for k, v in state_specs(cfg, batch, max_seq).items()}
+
+
+def prefill(params, batch, cfg: ModelConfig, run: RunConfig, max_seq: int):
+    """Full-prompt pass producing SSM states + (hybrid) KV caches."""
+    from .layers import apply_rope
+    h = embed(params["embed"], batch["tokens"], run)
+    B, L = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    state = init_state(cfg, B, max_seq)
+    sa = params.get("shared_attn")
+
+    # SSM layers under scan (recompute final states via the ssd final-state
+    # output); attention caches via in-carry dynamic updates.
+    from ..kernels.ssd import ops as ssd_ops
+
+    def body(carry, xs):
+        hh, kc, vc = carry
+        lp, i = xs
+        hn = rmsnorm(hh, lp["ln"], cfg.rms_eps)
+        hh = hh + ssm_block(lp["ssm"], hn, cfg, run)
+        if cfg.attn_every:
+            def do_attn(args):
+                hh, kc, vc = args
+                hn = rmsnorm(hh, sa["ln"], cfg.rms_eps)
+                cdt = run.compute_dtype
+                k = jnp.einsum("bld,dhk->blhk", hn, sa["attn"]["wk"].astype(cdt))
+                v = jnp.einsum("bld,dhk->blhk", hn, sa["attn"]["wv"].astype(cdt))
+                if cfg.qk_norm:
+                    k = rmsnorm(k, sa["attn"]["k_norm"], cfg.rms_eps)
+                k = apply_rope(k, positions, cfg.rope_theta)
+                app = i // cfg.attn_every
+                kc = jax.lax.dynamic_update_slice(
+                    kc, k.astype(kc.dtype)[None], (app, 0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    vc, v.astype(vc.dtype)[None], (app, 0, 0, 0, 0))
+                hh = hh + attention(sa["attn"], hn, positions, cfg, run)
+                hh = hh + mlp(sa["mlp"], rmsnorm(hh, sa["ln2"], cfg.rms_eps),
+                              run)
+                return hh, kc, vc
+            hh, kc, vc = jax.lax.cond(_is_attn_layer(cfg, i), do_attn,
+                                      lambda a: a, (hh, kc, vc))
+        return (hh, kc, vc), None
+
+    apps = n_attn_apps(cfg)
+    hd = cfg.hd
+    kc = jnp.zeros((max(apps, 1), B, max_seq, cfg.n_kv_heads, hd), jnp.bfloat16)
+    vc = jnp.zeros_like(kc)
+    if run.scan_layers:
+        (h, kc, vc), _ = jax.lax.scan(
+            body, (h, kc, vc),
+            (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    else:
+        carry = (h, kc, vc)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            carry, _ = body(carry, (lp, jnp.asarray(i, jnp.int32)))
+        h, kc, vc = carry
+
+    # Final SSM states: replay each layer's SSD scan final state.  For the
+    # serving path we recompute states in a second scan over layers (the
+    # first scan cannot also emit per-layer states of different shapes).
+    h2 = embed(params["embed"], batch["tokens"], run)
+
+    def body_state(carry, xs):
+        hh = carry
+        lp, i = xs
+        hn = rmsnorm(hh, lp["ln"], cfg.rms_eps)
+        st = _ssm_final_state(lp["ssm"], hn, cfg, run)
+        hh = hh + ssm_block(lp["ssm"], hn, cfg, run)
+        if cfg.attn_every:
+            hh = jax.lax.cond(
+                _is_attn_layer(cfg, i),
+                lambda x: _shared_block(sa, x, positions, cfg, run),
+                lambda x: x, hh)
+        return hh, st
+
+    if run.scan_layers:
+        _, states = jax.lax.scan(
+            body_state, h2,
+            (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    else:
+        sts = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h2, st = body_state(h2, (lp, jnp.asarray(i, jnp.int32)))
+            sts.append(st)
+        states = jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+
+    h = rmsnorm(h, params["ln_f"], cfg.rms_eps)
+    logits = logits_out(params["embed"], h[:, -1:, :], cfg, run)
+    state.update(states)
+    if apps:
+        state["k"], state["v"] = kc, vc
+    state["length"] = jnp.asarray(L, jnp.int32)
+    return logits, state
+
+
+def _ssm_final_state(lp_ssm, x, cfg: ModelConfig, run: RunConfig):
+    """Final (conv buffers, ssd state) of a layer given its input sequence."""
+    from ..kernels.ssd import ops as ssd_ops
+    cdt = run.compute_dtype
+    from .ssm import _causal_conv, _split_heads
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv_width
+    xt = x @ lp_ssm["w_x"].astype(cdt)
+    bt = x @ lp_ssm["w_B"].astype(cdt)
+    ct = x @ lp_ssm["w_C"].astype(cdt)
+    xz = jax.nn.silu(_causal_conv(xt, lp_ssm["conv_x"].astype(cdt)))
+    Bm = jax.nn.silu(_causal_conv(bt, lp_ssm["conv_B"].astype(cdt)))
+    Cm = jax.nn.silu(_causal_conv(ct, lp_ssm["conv_C"].astype(cdt)))
+    dt = jax.nn.softplus((x @ lp_ssm["w_dt"].astype(cdt)).astype(jnp.float32)
+                         + lp_ssm["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp_ssm["A_log"].astype(jnp.float32))
+    _, final = ssd_ops.ssd(_split_heads(xz, H), dt, A, Bm, Cm,
+                           chunk=min(64, x.shape[1]),
+                           use_pallas=run.use_pallas)
+    return {
+        "ssd": final,
+        "conv_x": xt[:, -(K - 1):, :].astype(jnp.float32),
+        "conv_B": bt[:, -(K - 1):, :].astype(jnp.float32),
+        "conv_C": ct[:, -(K - 1):, :].astype(jnp.float32),
+    }
+
+
+def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig,
+                run: RunConfig):
+    """tokens: [B,1] → (logits, new state).  O(1) per step for SSM layers,
+    O(cache length) for the hybrid's shared-attention applications."""
+    h = embed(params["embed"], tokens, run)[:, 0, :]     # [B, d]
+    length = state["length"]
+    sa = params.get("shared_attn")
+    apps = n_attn_apps(cfg)
+
+    def body(carry, xs):
+        hh, kc, vc = carry
+        lp, i, st = xs
+        hn = rmsnorm(hh, lp["ln"], cfg.rms_eps)
+        out, new_st = ssm_block_decode(lp["ssm"], hn, st, cfg, run)
+        hh = hh + out
+        if cfg.attn_every:
+            def do_attn(args):
+                hh, kc, vc = args
+                app = i // cfg.attn_every
+                kci = kc[app]
+                vci = vc[app]
+                hn = rmsnorm(hh[:, None, :], sa["ln"], cfg.rms_eps)
+                a, kci, vci = decode_attention(sa["attn"], hn, kci, vci,
+                                               length, cfg, run)
+                kc = jax.lax.dynamic_update_slice(
+                    kc, kci[None].astype(kc.dtype), (app, 0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    vc, vci[None].astype(vc.dtype), (app, 0, 0, 0, 0))
+                hh = hh + a[:, 0, :]
+                hh = hh + mlp(sa["mlp"],
+                              rmsnorm(hh, sa["ln2"], cfg.rms_eps), run)
+                return hh, kc, vc
+            hh, kc, vc = jax.lax.cond(_is_attn_layer(cfg, i), do_attn,
+                                      lambda a: a, (hh, kc, vc))
+        return (hh, kc, vc), new_st
+
+    ssm_st = {k: state[k] for k in ("ssd", "conv_x", "conv_B", "conv_C")}
+    kc = state.get("k", jnp.zeros((1, h.shape[0], 1, cfg.n_kv_heads, cfg.hd),
+                                  jnp.bfloat16))
+    vc = state.get("v", jnp.zeros_like(kc))
+    if run.scan_layers:
+        (h, kc, vc), new_ssm = jax.lax.scan(
+            body, (h, kc, vc),
+            (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32),
+             ssm_st))
+    else:
+        carry = (h, kc, vc)
+        sts = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            st_i = jax.tree.map(lambda x: x[i], ssm_st)
+            carry, st = body(carry, (lp, jnp.asarray(i, jnp.int32), st_i))
+            sts.append(st)
+        h, kc, vc = carry
+        new_ssm = jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+    h = rmsnorm(h, params["ln_f"], cfg.rms_eps)
+    logits = logits_out(params["embed"], h[:, None, :], cfg, run)
+    new_state = dict(new_ssm)
+    if apps:
+        new_state["k"], new_state["v"] = kc, vc
+    new_state["length"] = length + 1
+    return logits, new_state

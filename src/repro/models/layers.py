@@ -1,0 +1,279 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (train + cached decode), SwiGLU.
+
+Pure functions over parameter dicts.  Attention dispatches to the Pallas
+flash kernel when ``run.use_pallas`` (TPU) and to the jnp reference path
+otherwise (CPU dry-run / tests) — both produced by the same module so the
+oracle and the kernel can never diverge silently.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec, RunConfig, spec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., L, H, D]; positions: [..., L] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., L, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                              # [..., L, 1, D/2]
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    hd = cfg.hd
+    s: Dict[str, ParamSpec] = {
+        "wq": spec((cfg.d_model, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": spec((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((cfg.d_model, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((cfg.n_heads, hd, cfg.d_model), ("heads", "head_dim", "embed"),
+                   init="scaled"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = spec((hd,), (None,), init="ones")
+        s["k_norm"] = spec((hd,), (None,), init="ones")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Attention forward (training / prefill) — full sequence
+# ---------------------------------------------------------------------------
+
+
+def _sdpa_ref(q, k, v, causal: bool) -> jnp.ndarray:
+    """Reference scaled-dot-product attention.  q,k,v: [B,L,H,D] / [B,S,H,D]."""
+    B, Lq, H, D = q.shape
+    Lk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, precision=None).astype(jnp.float32)
+    logits = logits * scale
+    if causal:
+        qi = jnp.arange(Lq)[:, None] + (Lk - Lq)
+        ki = jnp.arange(Lk)[None, :]
+        mask = qi >= ki
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+# Above this many logit elements per (q-row block) the plain SDPA would
+# materialize an O(L²) tensor; switch to the chunked online-softmax path.
+_SDPA_CHUNK_THRESHOLD = 4096 * 4096
+
+
+def _sdpa_chunked(q, k, v, causal: bool, bq: int = 2048) -> jnp.ndarray:
+    """Flash-style attention in pure jnp: statically-unrolled q blocks so
+    peak memory is O(bq · Lk) instead of O(Lq · Lk).
+
+    Deliberately a Python loop, NOT lax.scan: XLA's cost analysis counts a
+    loop body once, which silently deleted ~98% of prefill attention FLOPs
+    from the roofline artifacts (the dry-run reads cost_analysis()).  The
+    unrolled form costs correctly and fuses per block on TPU."""
+    B, Lq, H, D = q.shape
+    Lk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    nq = (Lq + bq - 1) // bq
+    pad = nq * bq - Lq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ki = jnp.arange(Lk)
+    outs = []
+    for i in range(nq):
+        qs = qp[:, i * bq:(i + 1) * bq]                       # [B,bq,H,D]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qs, k).astype(jnp.float32) * scale
+        if causal:
+            qi = i * bq + jnp.arange(bq)[:, None] + (Lk - Lq)
+            s = jnp.where((qi >= ki[None, :])[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        outs.append(jnp.einsum("bhqk,bkhd->bqhd", p, v))
+    return jnp.concatenate(outs, axis=1)[:, :Lq]
+
+
+def attention(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+              positions: jnp.ndarray, cfg: ModelConfig, run: RunConfig,
+              causal: Optional[bool] = None) -> jnp.ndarray:
+    """Full-sequence GQA attention.  x: [B, L, d_model]."""
+    causal = cfg.causal if causal is None else causal
+    cdt = run.compute_dtype
+    hd = cfg.hd
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"].astype(cdt))
+    k = jnp.einsum("bld,dhk->blhk", x, params["wk"].astype(cdt))
+    v = jnp.einsum("bld,dhk->blhk", x, params["wv"].astype(cdt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # GQA: repeat KV heads up to query heads.
+    rep = cfg.n_heads // cfg.n_kv_heads
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if run.use_pallas:
+        from ..kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(q, k, v, causal=causal)
+    elif q.shape[1] * k.shape[1] > _SDPA_CHUNK_THRESHOLD:
+        o = _sdpa_chunked(q, k, v, causal)
+    else:
+        o = _sdpa_ref(q, k, v, causal)
+    return jnp.einsum("blhk,hkd->bld", o, params["wo"].astype(cdt))
+
+
+# ---------------------------------------------------------------------------
+# Attention with KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    hd = cfg.hd
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_seq: int, n_apps: int = 0,
+                   dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the cache (dry-run inputs).  ``n_apps`` > 0
+    builds a hybrid-model cache (one per shared-attention application)."""
+    layers = n_apps if n_apps else cfg.n_layers
+    hd = cfg.hd
+    shape = (layers, batch, max_seq, cfg.n_kv_heads, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+        "length": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def decode_attention(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length: jnp.ndarray, cfg: ModelConfig,
+                     run: RunConfig) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode.  x: [B, 1, d].  k/v_cache: [B, S, Hkv, D].
+
+    Returns (out [B,1,d], new_k, new_v).  The new token is written at
+    ``length``; attention spans the first ``length+1`` cache slots (masked).
+    """
+    cdt = run.compute_dtype
+    B, S, Hkv, D = k_cache.shape
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"].astype(cdt))
+    k = jnp.einsum("bld,dhk->blhk", x, params["wk"].astype(cdt))
+    v = jnp.einsum("bld,dhk->blhk", x, params["wv"].astype(cdt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.rms_eps)
+    pos = jnp.full((B, 1), length, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, length, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, length, 0, 0))
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kk = k_cache.astype(cdt)
+    vv = v_cache.astype(cdt)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    # [B,1,Hq,D] x [B,S,Hkv,D] — group query heads over kv heads.
+    qg = q.reshape(B, 1, Hkv, rep, D)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg, kk).astype(jnp.float32) * scale
+    mask = (jnp.arange(S) <= length)[None, None, None, None, :]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, vv).reshape(B, 1, Hkv * rep, D)
+    out = jnp.einsum("blhk,hkd->bld", o, params["wo"].astype(cdt))
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    return {
+        "w_gate": spec((cfg.d_model, ff), ("embed", "ffn")),
+        "w_up": spec((cfg.d_model, ff), ("embed", "ffn")),
+        "w_down": spec((ff, cfg.d_model), ("ffn", "embed"), init="scaled"),
+    }
+
+
+def mlp(params: Dict[str, jnp.ndarray], x: jnp.ndarray, run: RunConfig) -> jnp.ndarray:
+    cdt = run.compute_dtype
+    g = x @ params["w_gate"].astype(cdt)
+    u = x @ params["w_up"].astype(cdt)
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = {"tok": spec((cfg.vocab, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        s["unembed"] = spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return s
+
+
+def embed(params, tokens: jnp.ndarray, run: RunConfig) -> jnp.ndarray:
+    return params["tok"].astype(run.compute_dtype)[tokens]
+
+
+def logits_out(params, x: jnp.ndarray, cfg: ModelConfig, run: RunConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["tok"].astype(run.compute_dtype).T
+    else:
+        w = params["unembed"].astype(run.compute_dtype)
+    return x @ w
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE over (optionally masked) positions; fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,184 @@
+"""Model facade: one object per architecture exposing the whole lifecycle —
+specs → init → loss/train → prefill/decode — plus ShapeDtypeStruct input
+stand-ins (``input_specs``) and logical-axis annotations for sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hybrid as hybrid_mod
+from . import transformer as tf_mod
+from .common import (ModelConfig, RunConfig, abstract_params, init_params,
+                     param_count, reduce_config)
+from .layers import kv_cache_specs
+
+
+@dataclasses.dataclass
+class Model:
+    arch: str
+    cfg: ModelConfig
+    run: RunConfig
+
+    # ---- parameters -------------------------------------------------------
+    def specs(self):
+        if self.cfg.family in ("ssm", "hybrid"):
+            return hybrid_mod.hybrid_specs(self.cfg)
+        return tf_mod.decoder_specs(self.cfg)
+
+    def init(self, rng: jax.Array):
+        return init_params(rng, self.specs(), self.cfg.init_std)
+
+    def abstract(self, dtype=None):
+        """ShapeDtypeStruct params; ``dtype`` overrides floating leaves
+        (serve paths hold bf16 weights — cast offline at load time)."""
+        tree = abstract_params(self.specs())
+        if dtype is None:
+            return tree
+        import jax.numpy as jnp
+
+        def f(s):
+            if jnp.issubdtype(s.dtype, jnp.floating):
+                return jax.ShapeDtypeStruct(s.shape, dtype)
+            return s
+        return jax.tree.map(f, tree)
+
+    def n_params(self) -> int:
+        return param_count(self.specs())
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: shared + top-k routed experts)."""
+        total = self.n_params()
+        cfg = self.cfg
+        if not cfg.n_experts:
+            return total
+        e = cfg.n_experts_padded or cfg.n_experts
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        return total - (e - cfg.top_k) * cfg.n_layers * per_expert
+
+    # ---- training ---------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        if self.cfg.family in ("ssm", "hybrid"):
+            return hybrid_mod.loss_fn(params, batch, self.cfg, self.run)
+        return tf_mod.loss_fn(params, batch, self.cfg, self.run)
+
+    def forward(self, params, batch) -> jnp.ndarray:
+        if self.cfg.family in ("ssm", "hybrid"):
+            return hybrid_mod.forward(params, batch, self.cfg, self.run)
+        return tf_mod.forward(params, batch, self.cfg, self.run)
+
+    # ---- serving ----------------------------------------------------------
+    def prefill(self, params, batch, max_seq: int):
+        if self.cfg.family in ("ssm", "hybrid"):
+            return hybrid_mod.prefill(params, batch, self.cfg, self.run,
+                                      max_seq)
+        if self.cfg.is_encoder_only:
+            return tf_mod.forward(params, batch, self.cfg, self.run), None
+        return tf_mod.prefill(params, batch, self.cfg, self.run, max_seq)
+
+    def decode_step(self, params, state, tokens):
+        if self.cfg.family in ("ssm", "hybrid"):
+            return hybrid_mod.decode_step(params, state, tokens, self.cfg,
+                                          self.run)
+        return tf_mod.decode_step(params, state, tokens, self.cfg, self.run)
+
+    # ---- input stand-ins ---------------------------------------------------
+    def input_specs(self, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+        train → the training batch; prefill → the prompt batch;
+        decode → one new token (the cache/state comes from state_specs).
+        """
+        from ..configs.shapes import SHAPES, skip_reason
+        shape = SHAPES[shape_name]
+        reason = skip_reason(self.cfg, shape)
+        if reason:
+            raise ValueError(f"{self.arch} × {shape_name} skipped: {reason}")
+        cfg = self.cfg
+        B, L = shape.global_batch, shape.seq_len
+        i32, f32 = jnp.int32, jnp.float32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            if cfg.family == "audio":
+                return {"frames": sds((B, L, cfg.frame_dim), jnp.bfloat16),
+                        "labels": sds((B, L), i32),
+                        "mask": sds((B, L), jnp.bool_)}
+            batch: Dict[str, Any] = {"tokens": sds((B, L), i32),
+                                     "labels": sds((B, L), i32)}
+            if cfg.family == "vlm":
+                batch["patches"] = sds((B, cfg.n_patches, cfg.patch_dim),
+                                       jnp.bfloat16)
+                batch["mask"] = sds((B, L), jnp.bool_)
+            return batch
+        if shape.kind == "prefill":
+            if cfg.family == "audio":
+                return {"frames": sds((B, L, cfg.frame_dim), jnp.bfloat16)}
+            batch = {"tokens": sds((B, L), i32)}
+            if cfg.family == "vlm":
+                batch["patches"] = sds((B, cfg.n_patches, cfg.patch_dim),
+                                       jnp.bfloat16)
+            return batch
+        # decode: one new token; cache/state via state_specs
+        return {"tokens": sds((B, 1), i32)}
+
+    def input_axes(self, shape_name: str) -> Dict[str, Tuple]:
+        """Logical axes of each input tensor (for sharding via rules)."""
+        from ..configs.shapes import SHAPES
+        shape = SHAPES[shape_name]
+        cfg = self.cfg
+        ax: Dict[str, Tuple] = {}
+        names = self.input_specs(shape_name).keys()
+        for k in names:
+            if k == "tokens" or k == "labels" or k == "mask":
+                ax[k] = ("batch", "seq" if shape.kind != "decode" else None)
+            elif k == "frames":
+                ax[k] = ("batch", "seq", None)
+            elif k == "patches":
+                ax[k] = ("batch", None, None)
+        return ax
+
+    def state_specs(self, shape_name: str) -> Optional[Dict[str, Any]]:
+        """Decode/prefill-state (KV cache / SSM state) ShapeDtypeStructs.
+        For prefill shapes these are the *output* cache specs (used to pin
+        output shardings so XLA never replicates a 100+GB cache)."""
+        from ..configs.shapes import SHAPES
+        shape = SHAPES[shape_name]
+        if shape.kind == "train":
+            return None
+        cfg = self.cfg
+        if shape.kind == "prefill" and cfg.is_encoder_only:
+            return None
+        B, S = shape.global_batch, shape.seq_len
+        if cfg.family in ("ssm", "hybrid"):
+            return hybrid_mod.state_specs(cfg, B, S)
+        return kv_cache_specs(cfg, B, S)
+
+    def state_axes(self) -> Dict[str, Tuple]:
+        cfg = self.cfg
+        ax = {"length": ()}
+        if cfg.family in ("ssm", "hybrid"):
+            ax.update({
+                "ssd": ("layers", "batch", "ssm_heads", None, None),
+                "conv_x": ("layers", "batch", None, "ssm_inner"),
+                "conv_B": ("layers", "batch", None, None),
+                "conv_C": ("layers", "batch", None, None),
+            })
+            if hybrid_mod.n_attn_apps(cfg):
+                ax["k"] = (None, "batch", "seq", "kv_heads", None)
+                ax["v"] = (None, "batch", "seq", "kv_heads", None)
+            return ax
+        ax["k"] = ("layers", "batch", "seq", "kv_heads", None)
+        ax["v"] = ("layers", "batch", "seq", "kv_heads", None)
+        return ax
+
+
+def build(arch: str, run: Optional[RunConfig] = None,
+          smoke: bool = False) -> Model:
+    from ..configs.registry import get_config
+    cfg = get_config(arch)
+    if smoke:
+        cfg = reduce_config(cfg)
+    return Model(arch=arch, cfg=cfg, run=run or RunConfig())

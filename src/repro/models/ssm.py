@@ -1,0 +1,142 @@
+"""Mamba2 (SSD) block: projections + causal depthwise conv + SSD scan.
+
+Projections are split per destination sharding: the inner width and the
+dt-heads live on the 'model' axis; the (small) B/C state projections stay
+replicated — so no resharding collective sits inside the block.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd import ops as ssd_ops
+from .common import ModelConfig, ParamSpec, RunConfig, spec
+from .layers import rmsnorm
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    cw = cfg.ssm_conv_width
+    return {
+        "w_x": spec((cfg.d_model, di), ("embed", "ssm_inner")),
+        "w_z": spec((cfg.d_model, di), ("embed", "ssm_inner")),
+        "w_B": spec((cfg.d_model, N), ("embed", None)),
+        "w_C": spec((cfg.d_model, N), ("embed", None)),
+        "w_dt": spec((cfg.d_model, H), ("embed", "ssm_heads")),
+        "dt_bias": spec((H,), ("ssm_heads",), init="zeros"),
+        "A_log": spec((H,), ("ssm_heads",), init="zeros"),
+        "D": spec((H,), ("ssm_heads",), init="ones"),
+        "conv_x": spec((cw, di), ("conv_w", "ssm_inner"), init="normal"),
+        "conv_B": spec((cw, N), ("conv_w", None), init="normal"),
+        "conv_C": spec((cw, N), ("conv_w", None), init="normal"),
+        "gate_norm": spec((di,), ("ssm_inner",), init="ones"),
+        "w_out": spec((di, cfg.d_model), ("ssm_inner", "embed"), init="scaled"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x: [B,L,C]; w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K is tiny (4); unrolled taps
+        out = out + xp[:, k:k + x.shape[1], :] * w[k][None, None, :]
+    return out
+
+
+def _conv_decode(buf: jnp.ndarray, xt: jnp.ndarray, w: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-step causal conv.  buf: [B,K-1,C] (past inputs); xt: [B,C]."""
+    full = jnp.concatenate([buf, xt[:, None, :]], axis=1)       # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", full, w)
+    return y, full[:, 1:, :]
+
+
+def _split_heads(x: jnp.ndarray, H: int) -> jnp.ndarray:
+    B, L, di = x.shape
+    return x.reshape(B, L, H, di // H)
+
+
+def ssm_block(params, x: jnp.ndarray, cfg: ModelConfig, run: RunConfig
+              ) -> jnp.ndarray:
+    """Full-sequence Mamba2 block.  x: [B, L, d_model]."""
+    cdt = run.compute_dtype
+    H = cfg.ssm_heads
+    xz = jax.nn.silu(_causal_conv(x @ params["w_x"].astype(cdt),
+                                  params["conv_x"].astype(cdt)))
+    Bm = jax.nn.silu(_causal_conv(x @ params["w_B"].astype(cdt),
+                                  params["conv_B"].astype(cdt)))
+    Cm = jax.nn.silu(_causal_conv(x @ params["w_C"].astype(cdt),
+                                  params["conv_C"].astype(cdt)))
+    dt = jax.nn.softplus((x @ params["w_dt"].astype(cdt)).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = _split_heads(xz, H)
+    y, _ = ssd_ops.ssd(xh, dt, A, Bm, Cm, chunk=min(64, x.shape[1]),
+                       use_pallas=run.use_pallas)
+    y = y.astype(cdt) + params["D"].astype(cdt)[None, None, :, None] * xh
+    y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner)
+    z = jax.nn.silu(x @ params["w_z"].astype(cdt))
+    y = rmsnorm(y * z, params["gate_norm"], cfg.rms_eps)
+    return y @ params["w_out"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# Decode: recurrent single-token step with (conv buffers + SSD state)
+# ---------------------------------------------------------------------------
+
+
+def ssm_state_specs(cfg: ModelConfig, batch: int, n_layers: int,
+                    dtype=jnp.float32) -> Dict[str, jax.ShapeDtypeStruct]:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    K = cfg.ssm_conv_width
+    return {
+        "ssd": jax.ShapeDtypeStruct((n_layers, batch, H, N, P), dtype),
+        "conv_x": jax.ShapeDtypeStruct((n_layers, batch, K - 1, cfg.d_inner), dtype),
+        "conv_B": jax.ShapeDtypeStruct((n_layers, batch, K - 1, N), dtype),
+        "conv_C": jax.ShapeDtypeStruct((n_layers, batch, K - 1, N), dtype),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int,
+                   dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    return {k: jnp.zeros(s.shape, s.dtype)
+            for k, s in ssm_state_specs(cfg, batch, n_layers, dtype).items()}
+
+
+def ssm_block_decode(params, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                     cfg: ModelConfig, run: RunConfig
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B, d_model]; per-layer state slices (no leading layer axis)."""
+    cdt = run.compute_dtype
+    H = cfg.ssm_heads
+    xt = x @ params["w_x"].astype(cdt)
+    bt = x @ params["w_B"].astype(cdt)
+    ct = x @ params["w_C"].astype(cdt)
+    xc, conv_x = _conv_decode(state["conv_x"].astype(cdt), xt,
+                              params["conv_x"].astype(cdt))
+    bc, conv_B = _conv_decode(state["conv_B"].astype(cdt), bt,
+                              params["conv_B"].astype(cdt))
+    cc, conv_C = _conv_decode(state["conv_C"].astype(cdt), ct,
+                              params["conv_C"].astype(cdt))
+    xc, bc, cc = jax.nn.silu(xc), jax.nn.silu(bc), jax.nn.silu(cc)
+    dt = jax.nn.softplus((x @ params["w_dt"].astype(cdt)).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xc.reshape(x.shape[0], H, cfg.ssm_head_dim)
+    y, ssd_state = ssd_ops.ssd_decode(xh, dt, A, bc, cc,
+                                      state["ssd"].astype(jnp.float32))
+    y = y.astype(cdt) + params["D"].astype(cdt)[None, :, None] * xh
+    y = y.reshape(x.shape[0], cfg.d_inner)
+    z = jax.nn.silu(x @ params["w_z"].astype(cdt))
+    y = rmsnorm(y * z, params["gate_norm"], cfg.rms_eps)
+    out = y @ params["w_out"].astype(cdt)
+    new_state = {"ssd": ssd_state.astype(state["ssd"].dtype),
+                 "conv_x": conv_x.astype(state["conv_x"].dtype),
+                 "conv_B": conv_B.astype(state["conv_B"].dtype),
+                 "conv_C": conv_C.astype(state["conv_C"].dtype)}
+    return out, new_state

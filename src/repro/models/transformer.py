@@ -1,0 +1,228 @@
+"""Transformer families: dense/MoE decoder LMs, encoder-only (HuBERT),
+and the VLM backbone (InternVL2: stubbed patch embeddings + decoder LM).
+
+Layers are stacked with ``jax.lax.scan`` (single-layer compile) and the
+layer body is wrapped in a configurable remat policy.  The same parameter
+tree serves train, prefill and decode paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_mod
+from .common import ModelConfig, RunConfig, spec, stacked
+from .layers import (attention, attn_specs, cross_entropy, decode_attention,
+                     embed, embed_specs, logits_out, mlp, mlp_specs, rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"ln1": spec((cfg.d_model,), (None,), init="ones"),
+                         "ln2": spec((cfg.d_model,), (None,), init="ones"),
+                         "attn": attn_specs(cfg)}
+    if cfg.n_experts:
+        s["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def decoder_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {
+        "embed": embed_specs(cfg),
+        "layers": jax.tree.map(lambda sp: stacked(cfg.n_layers, sp),
+                               layer_specs(cfg),
+                               is_leaf=lambda x: hasattr(x, "axes")),
+        "ln_f": spec((cfg.d_model,), (None,), init="ones"),
+    }
+    if cfg.n_patches:      # VLM frontend stub: projection of patch embeds
+        s["patch_proj"] = spec((cfg.patch_dim, cfg.d_model), ("patch", "embed"))
+    if cfg.frame_dim:      # audio frontend stub: projection of frame embeds
+        s["frame_proj"] = spec((cfg.frame_dim, cfg.d_model), ("patch", "embed"))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Remat policy
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, run: RunConfig):
+    if run.remat == "none":
+        return fn
+    if run.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+
+def _layer_body(h: jnp.ndarray, lp, positions, cfg: ModelConfig,
+                run: RunConfig) -> jnp.ndarray:
+    from ..parallel.ctx import constrain
+    h = constrain(h, ("batch", "seq_act", None))
+    h = h + attention(lp["attn"], rmsnorm(h, lp["ln1"], cfg.rms_eps),
+                      positions, cfg, run)
+    h = constrain(h, ("batch", "seq_act", None))
+    hn = rmsnorm(h, lp["ln2"], cfg.rms_eps)
+    if cfg.n_experts:
+        h = h + moe_mod.moe(lp["moe"], hn, cfg, run)
+    else:
+        h = h + mlp(lp["mlp"], hn, run)
+    return h
+
+
+def backbone(params, h: jnp.ndarray, positions, cfg: ModelConfig,
+             run: RunConfig) -> jnp.ndarray:
+    body = _remat(
+        lambda hh, lp: (_layer_body(hh, lp, positions, cfg, run), None), run)
+    if run.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, _ = body(h, lp)
+    return rmsnorm(h, params["ln_f"], cfg.rms_eps)
+
+
+def embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                 run: RunConfig) -> jnp.ndarray:
+    """Token / frame / patch embedding, per family."""
+    if cfg.frame_dim:                      # audio encoder: frames only
+        return batch["frames"].astype(run.compute_dtype) @ \
+            params["frame_proj"].astype(run.compute_dtype)
+    h = embed(params["embed"], batch["tokens"], run)
+    if cfg.n_patches:                      # VLM: patches overwrite the prefix
+        pe = batch["patches"].astype(run.compute_dtype) @ \
+            params["patch_proj"].astype(run.compute_dtype)
+        h = jnp.concatenate([pe, h[:, cfg.n_patches:, :]], axis=1)
+    return h
+
+
+def forward(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            run: RunConfig) -> jnp.ndarray:
+    h = embed_inputs(params, batch, cfg, run)
+    B, L = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    h = backbone(params, h, positions, cfg, run)
+    return logits_out(params["embed"], h, cfg, run)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            run: RunConfig) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits = forward(params, batch, cfg, run)
+    mask = batch.get("mask")
+    if cfg.is_encoder_only:
+        loss = cross_entropy(logits, batch["labels"], mask)
+    else:
+        # next-token prediction; mask covers padding / patch prefix
+        lg = logits[:, :-1]
+        lb = batch["labels"][:, 1:]
+        m = None if mask is None else mask[:, 1:]
+        loss = cross_entropy(lg, lb, m)
+    metrics = {"loss": loss}
+    if cfg.n_experts:
+        aux = 0.0
+        h = embed_inputs(params, batch, cfg, run)
+        # router balance measured at the input embedding of layer 0 (cheap
+        # proxy; the per-layer aux sum is applied on TPU runs)
+        aux = moe_mod.moe_load_balance_loss(
+            jax.tree.map(lambda x: x[0], params["layers"]["moe"]), h, cfg, run)
+        metrics["aux_loss"] = aux
+        loss = loss + 0.01 * aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch, cfg: ModelConfig, run: RunConfig, max_seq: int):
+    """Run the full prompt, return (last_logits, kv_cache).
+
+    Cached keys are stored post-qk-norm / post-RoPE — the exact layout
+    ``decode_attention`` writes — so decode is O(1) per step.
+    """
+    from .layers import apply_rope
+    h = embed_inputs(params, batch, cfg, run)
+    B, L = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def body(hh, lp):
+        hn = rmsnorm(hh, lp["ln1"], cfg.rms_eps)
+        cdt = run.compute_dtype
+        k = jnp.einsum("bld,dhk->blhk", hn, lp["attn"]["wk"].astype(cdt))
+        v = jnp.einsum("bld,dhk->blhk", hn, lp["attn"]["wv"].astype(cdt))
+        if cfg.qk_norm:
+            k = rmsnorm(k, lp["attn"]["k_norm"], cfg.rms_eps)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        hh = _layer_body(hh, lp, positions, cfg, run)
+        return hh, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    if run.scan_layers:
+        h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+    else:   # unrolled (cost probes): loop bodies visible to cost analysis
+        kvs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, kv = body(h, lp)
+            kvs.append(kv)
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+    h = rmsnorm(h, params["ln_f"], cfg.rms_eps)
+    logits = logits_out(params["embed"], h[:, -1:, :], cfg, run)
+
+    pad = max_seq - L
+    cache = {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "length": jnp.asarray(L, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
+                run: RunConfig):
+    """tokens: [B, 1] → (logits [B,1,V], updated cache)."""
+    h = embed(params["embed"], tokens, run)
+    length = cache["length"]
+
+    def body3(hh, xs):   # keep [B,1,d] rank throughout
+        lp, kc, vc = xs
+        hn = rmsnorm(hh, lp["ln1"], cfg.rms_eps)
+        a, kc, vc = decode_attention(lp["attn"], hn, kc, vc, length, cfg, run)
+        hh = hh + a
+        hn = rmsnorm(hh, lp["ln2"], cfg.rms_eps)
+        if cfg.n_experts:
+            hh = hh + moe_mod.moe(lp["moe"], hn, cfg, run)
+        else:
+            hh = hh + mlp(lp["mlp"], hn, run)
+        return hh, (kc, vc)
+
+    if run.scan_layers:
+        h, (ks, vs) = jax.lax.scan(body3, h, (params["layers"], cache["k"],
+                                              cache["v"]))
+    else:
+        kvs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, kv = body3(h, (lp, cache["k"][i], cache["v"][i]))
+            kvs.append(kv)
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+    h = rmsnorm(h, params["ln_f"], cfg.rms_eps)
+    logits = logits_out(params["embed"], h, cfg, run)
+    new_cache = {"k": ks, "v": vs, "length": length + 1}
+    return logits, new_cache

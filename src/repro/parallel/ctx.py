@@ -1,0 +1,46 @@
+"""Trace-time sharding context.
+
+Model code is mesh-agnostic: it calls ``constrain(x, logical_axes)`` on
+hot intermediates (the residual stream, MoE buffers).  The step builders
+enter a :func:`scope` *inside* the traced function, so the constraints
+bind to the active mesh + rule set during tracing and no-op otherwise
+(single-device tests, oracle runs).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import logical_to_pspec
+
+_state = threading.local()
+
+
+def current() -> Optional[tuple]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def scope(mesh: Mesh, rules: Dict[str, Optional[str]]):
+    prev = current()
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply with_sharding_constraint(x, axes→rules→mesh) if in scope."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ps = logical_to_pspec(axes, rules, mesh.axis_names, x.shape, sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))

@@ -1,0 +1,91 @@
+"""Sharding assembly: glue between ParamSpec logical axes, the mesh, and
+jit in/out shardings for the train / prefill / decode entry points.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import (LONG_RULES, SERVE_RULES, TRAIN_RULES,
+                             logical_to_pspec, param_pspecs)
+from ..models.registry import Model
+
+PyTree = Any
+
+
+def rules_for(kind: str, long_context: bool = False) -> Dict[str, Optional[str]]:
+    if kind == "train":
+        return TRAIN_RULES
+    return LONG_RULES if long_context else SERVE_RULES
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def named(mesh: Mesh, pspec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        pspec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def model_param_shardings(model: Model, mesh: Mesh, kind: str = "train",
+                          long_context: bool = False) -> PyTree:
+    rules = rules_for(kind, long_context)
+    pspecs = param_pspecs(model.specs(), rules, mesh.axis_names,
+                          mesh_axis_sizes(mesh))
+    return named(mesh, pspecs)
+
+
+def batch_shardings(model: Model, mesh: Mesh, shape_name: str,
+                    kind: str = "train", long_context: bool = False) -> Dict:
+    rules = rules_for(kind, long_context)
+    sizes = mesh_axis_sizes(mesh)
+    multi_pod = "pod" in mesh.axis_names
+    axes = model.input_axes(shape_name)
+    specs = model.input_specs(shape_name)
+    out = {}
+    for k, a in axes.items():
+        # the batch axis spans (pod, data) on multi-pod meshes
+        a = tuple(("pod_batch" if (x == "batch" and multi_pod) else x)
+                  for x in a)
+        out[k] = NamedSharding(mesh, logical_to_pspec(
+            a, rules, mesh.axis_names, specs[k].shape, sizes))
+    return out
+
+
+def state_shardings(model: Model, mesh: Mesh, shape_name: str,
+                    long_context: bool = False) -> Optional[Dict]:
+    sspecs = model.state_specs(shape_name)
+    if sspecs is None:
+        return None
+    rules = rules_for("serve", long_context)
+    sizes = mesh_axis_sizes(mesh)
+    multi_pod = "pod" in mesh.axis_names
+    axes = model.state_axes()
+    tp = sizes.get("model", 1)
+    out = {}
+    for k, sds in sspecs.items():
+        a = axes[k]
+        a = tuple(("pod_batch" if (x == "batch" and multi_pod) else x)
+                  for x in a)
+        if k in ("k", "v") and not long_context:
+            # KV cache: prefer sharding kv heads over 'model'; when the
+            # head count doesn't divide TP, shard the cache *sequence*
+            # over 'model' instead (keeps per-device cache ≤ HBM for the
+            # 32k decode cells of 8-KV-head archs).
+            if model.cfg.n_kv_heads % tp != 0:
+                a = tuple(("seq_model" if x == "seq" else x) for x in a)
+                rules = dict(rules)
+                rules["seq_model"] = "model"
+        out[k] = NamedSharding(mesh, logical_to_pspec(
+            a, rules, mesh.axis_names, sds.shape, sizes))
+    return out
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,52 @@
+"""Sharded serving step builders: prefill and single-token decode."""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..configs.shapes import SHAPES
+from ..models.common import LONG_RULES, SERVE_RULES
+from ..models.registry import Model
+from ..parallel import ctx
+from ..parallel import sharding as shd
+
+
+def build_prefill(model: Model, mesh: Mesh, shape_name: str):
+    shape = SHAPES[shape_name]
+    long_ctx = shape.seq_len > 100_000
+    rules = LONG_RULES if long_ctx else SERVE_RULES
+    param_sh = shd.model_param_shardings(model, mesh, "serve", long_ctx)
+    batch_sh = shd.batch_shardings(model, mesh, shape_name, "serve", long_ctx)
+
+    def prefill(params, batch):
+        with ctx.scope(mesh, rules):
+            return model.prefill(params, batch, shape.seq_len)
+
+    # Pin the output cache shardings — left to 'auto', XLA replicates the
+    # multi-hundred-GB KV cache across the model axis.
+    state_sh = shd.state_shardings(model, mesh, shape_name, long_ctx)
+    fn = jax.jit(prefill, in_shardings=(param_sh, batch_sh),
+                 out_shardings=(None, state_sh))
+    return fn, param_sh, batch_sh
+
+
+def build_decode_step(model: Model, mesh: Mesh, shape_name: str):
+    shape = SHAPES[shape_name]
+    long_ctx = shape.seq_len > 100_000
+    rules = LONG_RULES if long_ctx else SERVE_RULES
+    param_sh = shd.model_param_shardings(model, mesh, "serve", long_ctx)
+    state_sh = shd.state_shardings(model, mesh, shape_name, long_ctx)
+    tok_sh = shd.batch_shardings(model, mesh, shape_name, "serve", long_ctx)
+
+    def decode(params, state, tokens):
+        with ctx.scope(mesh, rules):
+            return model.decode_step(params, state, tokens)
+
+    fn = jax.jit(decode,
+                 in_shardings=(param_sh, state_sh, tok_sh["tokens"]),
+                 out_shardings=(None, state_sh),
+                 donate_argnums=(1,))
+    return fn, param_sh, state_sh, tok_sh

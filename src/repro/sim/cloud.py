@@ -1,0 +1,154 @@
+"""IaaS substrate: VMs with FIFO local-storage caches and container images.
+
+This is the infrastructure layer shared by every scheduling policy — the
+policies differ only in *selection*, *budget handling* and *deprovisioning*,
+never in the physics modelled here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+from ..core.types import MS, PlatformConfig, VMType
+
+# Data items are keyed by their producer: ("out", wid, tid) for task outputs,
+# ("ext", wid, tid) for staged external inputs.
+DataKey = Tuple[str, int, int]
+
+VM_PROVISIONING = 1
+VM_IDLE = 2
+VM_BUSY = 3
+VM_TERMINATED = 4
+
+
+@dataclasses.dataclass
+class VM:
+    vmid: int
+    vmt_idx: int
+    vmt: VMType
+    status: int = VM_PROVISIONING
+    lease_start_ms: int = 0
+    ready_ms: int = 0                 # provisioning completes
+    idle_since_ms: int = 0
+    busy_ms: int = 0                  # accumulated busy time (utilization)
+    terminated_ms: int = -1
+    active_container: Optional[str] = None
+    owner_tag: Optional[object] = None  # NS: wid; WS: app; else None
+    # FIFO caches (insertion-ordered).
+    image_cache: "OrderedDict[str, bool]" = dataclasses.field(
+        default_factory=OrderedDict
+    )
+    data_cache: "OrderedDict[DataKey, float]" = dataclasses.field(
+        default_factory=OrderedDict
+    )
+    cached_mb: float = 0.0
+
+    # ----- container image cache ------------------------------------------
+    def container_ms(self, cfg: PlatformConfig, app: str, use_containers: bool) -> int:
+        """Time to make ``app``'s container active on this VM."""
+        if not use_containers:
+            return 0
+        if self.active_container == app:
+            return 0
+        if app in self.image_cache:
+            return cfg.container_init_ms
+        return cfg.container_provision_ms
+
+    def activate_container(self, cfg: PlatformConfig, app: str, use_containers: bool) -> int:
+        ms = self.container_ms(cfg, app, use_containers)
+        if not use_containers:
+            return 0
+        if app not in self.image_cache:
+            self.image_cache[app] = True
+            while len(self.image_cache) > cfg.image_slots:
+                self.image_cache.popitem(last=False)  # FIFO eviction
+        self.active_container = app
+        return ms
+
+    # ----- data cache -------------------------------------------------------
+    def has_data(self, key: DataKey) -> bool:
+        return key in self.data_cache
+
+    def missing_mb(self, inputs: List[Tuple[DataKey, float]]) -> float:
+        return sum(mb for key, mb in inputs if key not in self.data_cache)
+
+    def has_all_inputs(self, inputs: List[Tuple[DataKey, float]]) -> bool:
+        return all(key in self.data_cache for key, mb in inputs if mb > 0)
+
+    def cache_put(self, cfg: PlatformConfig, key: DataKey, mb: float,
+                  index: Optional[Dict[DataKey, set]] = None) -> None:
+        if mb <= 0:
+            return
+        if key in self.data_cache:
+            return  # already cached; FIFO order unchanged (paper: FIFO, not LRU)
+        self.data_cache[key] = mb
+        self.cached_mb += mb
+        if index is not None:
+            index.setdefault(key, set()).add(self.vmid)
+        cap_mb = self.vmt.storage_mb
+        while (
+            self.cached_mb > cap_mb or len(self.data_cache) > cfg.cache_slots
+        ) and self.data_cache:
+            old_key, old_mb = self.data_cache.popitem(last=False)
+            self.cached_mb -= old_mb
+            if index is not None and old_key in index:
+                index[old_key].discard(self.vmid)
+
+
+class VMPool:
+    """The platform's leased-VM inventory plus lifetime accounting.
+
+    ``data_index`` is an inverted index DataKey → {vmid}: which live VMs
+    hold a given dataset.  The batched (JAX) scheduling cycle reads it to
+    build the task×VM missing-bytes matrix without touching per-VM dicts.
+    """
+
+    def __init__(self, cfg: PlatformConfig):
+        self.cfg = cfg
+        self.vms: List[VM] = []
+        self.data_index: Dict[DataKey, set] = {}
+        self.vm_seconds_by_type: Dict[str, float] = {
+            v.name: 0.0 for v in cfg.vm_types
+        }
+        self.vm_busy_seconds_by_type: Dict[str, float] = {
+            v.name: 0.0 for v in cfg.vm_types
+        }
+        self.vm_count_by_type: Dict[str, int] = {v.name: 0 for v in cfg.vm_types}
+
+    def provision(self, vmt_idx: int, now_ms: int, owner_tag=None) -> VM:
+        vmt = self.cfg.vm_types[vmt_idx]
+        vm = VM(
+            vmid=len(self.vms),
+            vmt_idx=vmt_idx,
+            vmt=vmt,
+            status=VM_PROVISIONING,
+            lease_start_ms=now_ms,
+            ready_ms=now_ms + self.cfg.vm_provision_delay_ms,
+            owner_tag=owner_tag,
+        )
+        self.vms.append(vm)
+        self.vm_count_by_type[vmt.name] += 1
+        return vm
+
+    def terminate(self, vm: VM, now_ms: int) -> None:
+        assert vm.status in (VM_IDLE, VM_PROVISIONING), "cannot kill busy VM"
+        vm.status = VM_TERMINATED
+        vm.terminated_ms = now_ms
+        for key in vm.data_cache:
+            if key in self.data_index:
+                self.data_index[key].discard(vm.vmid)
+        lease_ms = now_ms - vm.lease_start_ms
+        self.vm_seconds_by_type[vm.vmt.name] += lease_ms / MS
+        self.vm_busy_seconds_by_type[vm.vmt.name] += vm.busy_ms / MS
+
+    def finalize(self, now_ms: int) -> None:
+        """Close the books on any VM still alive at simulation end."""
+        for vm in self.vms:
+            if vm.status != VM_TERMINATED:
+                if vm.status == VM_BUSY:
+                    vm.status = VM_IDLE  # should not happen on a drained sim
+                self.terminate(vm, now_ms)
+
+    def idle_vms(self) -> List[VM]:
+        return [vm for vm in self.vms if vm.status == VM_IDLE]

@@ -1,0 +1,71 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule.
+
+Self-contained (no optax dependency).  Optimizer state is a pytree shaped
+exactly like the parameters, so it inherits the parameter shardings —
+FSDP shards the moments the same way it shards the weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import RunConfig
+
+PyTree = Any
+
+
+def init_opt_state(params: PyTree) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"mu": zeros(), "nu": zeros(),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_specs(param_specs: PyTree) -> Dict[str, Any]:
+    """ParamSpec tree for the optimizer state (mirrors params)."""
+    return {"mu": param_specs, "nu": param_specs, "step": None}
+
+
+def lr_schedule(step: jnp.ndarray, base_lr: float, warmup: int = 100,
+                total: int = 10_000) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params: PyTree, grads: PyTree, opt: Dict[str, Any],
+                 run: RunConfig) -> Tuple[PyTree, Dict[str, Any],
+                                          Dict[str, jnp.ndarray]]:
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2, eps = run.adam_b1, run.adam_b2, run.adam_eps
+    lr = lr_schedule(step, run.learning_rate)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["nu"], grads)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mh = m / c1
+        vh = v / c2
+        return (p.astype(jnp.float32)
+                - lr * (mh / (jnp.sqrt(vh) + eps)
+                        + run.weight_decay * p.astype(jnp.float32))
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"mu": mu, "nu": nu, "step": step}, metrics

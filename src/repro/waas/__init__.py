@@ -1,0 +1,3 @@
+"""WaaS-for-ML bridge: EBPSM scheduling multi-tenant TPU-slice jobs."""
+from .platform import compare_policies, run_platform  # noqa: F401
+from .mljobs import ml_workload  # noqa: F401

@@ -1,0 +1,108 @@
+"""Property tests for Algorithms 1 & 3 (budget distribution / update)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import budget as bmod
+from repro.core import costs
+from repro.core.mslbl import distribute_budget_mslbl
+from repro.core.types import PlatformConfig, Task, Workflow
+from repro.workflows.dax import generate_workflow
+
+CFG = PlatformConfig()
+
+
+def random_wf(seed: int, n: int = 30, app: str = "montage") -> Workflow:
+    rng = np.random.default_rng(seed)
+    return generate_workflow(app, 0, n, rng)
+
+
+@st.composite
+def wf_and_budget(draw):
+    seed = draw(st.integers(0, 10_000))
+    app = draw(st.sampled_from(["montage", "sipht", "epigenome",
+                                "ligo", "cybershake"]))
+    n = draw(st.integers(10, 80))
+    wf = random_wf(seed, n, app)
+    lo, hi = bmod.min_max_workflow_cost(CFG, wf)
+    u = draw(st.floats(0.0, 1.0))
+    return wf, lo + u * (hi - lo)
+
+
+@given(wf_and_budget())
+@settings(max_examples=40, deadline=None)
+def test_distribution_conserves_budget(wb):
+    wf, beta = wb
+    leftover = bmod.distribute_budget(CFG, wf, beta)
+    total = sum(t.budget for t in wf.tasks) + leftover
+    assert total <= beta + 1e-6
+    assert all(t.budget >= 0 for t in wf.tasks)
+    assert leftover >= 0
+
+
+@given(wf_and_budget())
+@settings(max_examples=40, deadline=None)
+def test_distribution_exhausts_or_caps(wb):
+    """If budget is left over, no single next-tier upgrade is affordable
+    (the SFTD sweep stopped for a reason)."""
+    wf, beta = wb
+    leftover = bmod.distribute_budget(CFG, wf, beta)
+    if leftover > 1e-6:
+        by_speed = sorted(CFG.vm_types, key=lambda v: v.mips)
+        for t in wf.tasks:
+            mb = bmod.input_mb(wf, t)
+            tiers = [costs.estimate_full_cost(CFG, v, t, mb)
+                     for v in by_speed]
+            next_up = [c for c in tiers if c > t.budget + 1e-9]
+            if next_up:
+                delta = min(next_up) - t.budget
+                assert delta > leftover - 1e-6, (t.tid, delta, leftover)
+
+
+@given(wf_and_budget())
+@settings(max_examples=30, deadline=None)
+def test_levels_and_ranks(wb):
+    wf, beta = wb
+    bmod.distribute_budget(CFG, wf, beta)
+    for t in wf.tasks:
+        for p in t.parents:
+            assert wf.tasks[p].level < t.level
+            assert wf.tasks[p].rank < t.rank  # level-major order
+
+
+@given(wf_and_budget(), st.floats(0.0, 2.0), st.integers(0, 29))
+@settings(max_examples=40, deadline=None)
+def test_update_budget_no_money_creation(wb, cost_factor, fin_idx):
+    wf, beta = wb
+    spare0 = bmod.distribute_budget(CFG, wf, beta)
+    fin = fin_idx % wf.n_tasks
+    unscheduled = [t.tid for t in wf.tasks if t.tid != fin]
+    pool_before = sum(wf.tasks[t].budget for t in unscheduled) \
+        + wf.tasks[fin].budget + spare0
+    actual = cost_factor * max(wf.tasks[fin].budget, 1.0)
+    spare1 = bmod.update_budget(CFG, wf, fin, actual, spare0, unscheduled)
+    pool_after = sum(wf.tasks[t].budget for t in unscheduled) + spare1
+    # conservation: money after ≤ money before − min(actual, headroom)…
+    assert pool_after <= pool_before - min(actual, pool_before) + 1e-6 \
+        or pool_after <= pool_before + 1e-6
+    assert spare1 >= 0
+
+
+@given(wf_and_budget())
+@settings(max_examples=30, deadline=None)
+def test_mslbl_interpolates(wb):
+    wf, beta = wb
+    distribute_budget_mslbl(CFG, wf, beta)
+    cheap = min(CFG.vm_types, key=lambda v: v.mips)
+    fast = max(CFG.vm_types, key=lambda v: v.mips)
+    for t in wf.tasks:
+        mb = bmod.input_mb(wf, t)
+        cmin = costs.estimate_full_cost(CFG, cheap, t, mb)
+        cmax = costs.estimate_full_cost(CFG, fast, t, mb)
+        assert cmin - 1e-6 <= t.budget <= cmax + 1e-6
+
+
+def test_min_max_cost_order():
+    wf = random_wf(7, 40)
+    lo, hi = bmod.min_max_workflow_cost(CFG, wf)
+    assert 0 < lo < hi

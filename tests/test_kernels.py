@@ -1,0 +1,109 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.affinity.ops import affinity
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_decode_ref, ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("B,L,H,D,causal,dtype", [
+    (2, 256, 4, 64, True, jnp.float32),
+    (1, 128, 2, 128, False, jnp.float32),
+    (2, 200, 3, 64, True, jnp.float32),       # non-multiple of block
+    (1, 96, 1, 32, True, jnp.float32),
+    (2, 256, 2, 64, True, jnp.bfloat16),
+])
+def test_flash_attention_sweep(B, L, H, D, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, L, H, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, L, H, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, L, H, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("B,L,H,P,N,Q", [
+    (2, 128, 3, 32, 16, 32),
+    (1, 256, 2, 64, 128, 64),
+    (2, 64, 4, 16, 32, 16),
+    (1, 128, 1, 64, 64, 128),
+])
+def test_ssd_kernel_sweep(B, L, H, P, N, Q):
+    x = jnp.asarray(RNG.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(B, L, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, L, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, L, N)), jnp.float32)
+    y_ref, s_ref = ssd_ref(x, dt, A, Bm, Cm, chunk=Q)
+    y_pal, s_pal = ssd(x, dt, A, Bm, Cm, chunk=Q, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref),
+                               atol=1e-4)
+
+
+def test_ssd_chunked_equals_sequential_recurrence():
+    B, L, H, P, N = 1, 64, 2, 16, 8
+    x = jnp.asarray(RNG.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(B, L, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, L, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, L, N)), jnp.float32)
+    y_ref, s_ref = ssd_ref(x, dt, A, Bm, Cm, chunk=16)
+    state = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(L):
+        y, state = ssd_decode_ref(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t],
+                                  state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_ref),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("T,V", [(16, 32), (37, 100), (64, 7), (1, 1)])
+def test_affinity_kernel_matches_ref(T, V):
+    rng = np.random.default_rng(T * 1000 + V)
+    args = (
+        jnp.asarray(rng.uniform(10, 900, T), jnp.float32),
+        jnp.asarray(rng.uniform(1, 150, T), jnp.float32),
+        jnp.asarray(rng.uniform(5, 500, T), jnp.float32),
+        jnp.asarray(rng.uniform(0, 200, (T, V)), jnp.float32),
+        jnp.asarray(rng.choice([0., 400., 10000.], (T, V)), jnp.float32),
+        jnp.asarray(rng.choice([0, 1, 2, 3], (T, V)), jnp.int32),
+        jnp.asarray(rng.choice([2., 4., 8., 16.], V), jnp.float32),
+        jnp.full((V,), 20.0, jnp.float32),
+        jnp.asarray(rng.choice([1., 2., 4., 8.], V), jnp.float32),
+    )
+    r = affinity(*args, gs_read=50., gs_write=30., bp_ms=1000.,
+                 use_pallas=False)
+    p = affinity(*args, gs_read=50., gs_write=30., bp_ms=1000.,
+                 use_pallas=True)
+    for name, a, b in zip(r._fields, r, p):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+
+
+def test_affinity_tier_priority():
+    """A slower tier-1 VM must beat a faster tier-3 VM (Alg. 2 ordering)."""
+    T, V = 1, 2
+    size = jnp.asarray([100.0]); out_mb = jnp.asarray([10.0])
+    budget = jnp.asarray([1e6])
+    missing = jnp.asarray([[0.0, 0.0]])
+    cont = jnp.asarray([[0.0, 0.0]])
+    tier = jnp.asarray([[1, 3]], jnp.int32)
+    mips = jnp.asarray([2.0, 16.0])       # tier-3 VM is 8× faster
+    bw = jnp.full((V,), 20.0); price = mips / 2
+    r = affinity(size, out_mb, budget, missing, cont, tier, mips, bw, price,
+                 gs_read=50., gs_write=30., bp_ms=1000.)
+    assert int(r.best_vm[0]) == 0
+    assert int(r.best_tier[0]) == 1

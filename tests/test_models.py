@@ -1,0 +1,102 @@
+"""Per-arch smoke tests: reduced configs, one forward/loss (+ decode
+consistency for decoder families).  Runs on CPU with 1 device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config, skip_reason
+from repro.models import RunConfig, build
+
+RUN = RunConfig(remat="none")
+RNG = jax.random.PRNGKey(0)
+
+
+def smoke_batch(cfg, B=2, L=32):
+    rng = np.random.default_rng(0)
+    if cfg.family == "audio":
+        return {"frames": jnp.asarray(rng.normal(size=(B, L, cfg.frame_dim)),
+                                      jnp.bfloat16),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, L)),
+                                      jnp.int32),
+                "mask": jnp.ones((B, L), bool)}
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, L)),
+                                   jnp.int32)}
+    batch["labels"] = batch["tokens"]
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.patch_dim)), jnp.bfloat16)
+        mask = np.ones((B, L), bool)
+        mask[:, :min(cfg.n_patches, L)] = False
+        batch["mask"] = jnp.asarray(mask)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_loss(arch):
+    m = build(arch, RUN, smoke=True)
+    params = m.init(RNG)
+    batch = smoke_batch(m.cfg)
+    loss, metrics = jax.jit(m.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    logits = m.forward(params, batch)
+    B, L = batch.get("tokens", batch.get("frames"))[...].shape[:2]
+    assert logits.shape[:2] == (B, L)
+    assert logits.shape[-1] == m.cfg.vocab
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "qwen3-32b",
+                                  "qwen2-moe-a2.7b", "internvl2-1b",
+                                  "mamba2-780m", "zamba2-1.2b"])
+def test_decode_matches_forward(arch):
+    m = build(arch, RUN, smoke=True)
+    cfg = m.cfg
+    params = m.init(RNG)
+    B, L, S = 2, 16, 24
+    toks = jax.random.randint(RNG, (B, L + 1), 0, cfg.vocab)
+    batch = {"tokens": toks[:, :L]}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            RNG, (B, cfg.n_patches, cfg.patch_dim), jnp.bfloat16)
+    _, state = jax.jit(lambda p, b: m.prefill(p, b, S))(params, batch)
+    logits_dec, state2 = jax.jit(m.decode_step)(params, state,
+                                                toks[:, L:L + 1])
+    full_batch = dict(batch)
+    full_batch["tokens"] = toks
+    full = m.forward(params, full_batch)
+    ref = full[:, L, :].astype(jnp.float32)
+    got = logits_dec[:, 0, :].astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(ref))) or 1.0
+    assert float(jnp.max(jnp.abs(got - ref))) < 0.15 * max(scale, 1.0)
+    assert int(state2["length"]) == L + 1
+
+
+def test_cell_enumeration_covers_40():
+    cs = list(cells())
+    assert len(cs) == 40
+    skips = [c for c in cs if c[2] is not None]
+    # encoder-only: 2 decode skips; 7 non-sub-quadratic archs skip long_500k
+    assert len(skips) == 2 + 7
+
+
+def test_skip_rules():
+    hubert = get_config("hubert-xlarge")
+    assert skip_reason(hubert, SHAPES["decode_32k"])
+    assert skip_reason(hubert, SHAPES["long_500k"])
+    assert skip_reason(get_config("llama3-8b"), SHAPES["long_500k"])
+    assert not skip_reason(get_config("mamba2-780m"), SHAPES["long_500k"])
+    assert not skip_reason(get_config("zamba2-1.2b"), SHAPES["long_500k"])
+
+
+def test_param_counts_full_configs():
+    """Full (non-smoke) configs land near the published sizes."""
+    expect = {"llama3-8b": (7e9, 9.5e9),
+              "deepseek-coder-33b": (30e9, 37e9),
+              "phi3-medium-14b": (13e9, 18e9),     # heads padded 40→48
+              "mamba2-780m": (0.6e9, 1.0e9),
+              "zamba2-1.2b": (1.0e9, 1.6e9),
+              "qwen2-moe-a2.7b": (13e9, 16e9)}     # total (not active)
+    for arch, (lo, hi) in expect.items():
+        n = build(arch).n_params()
+        assert lo < n < hi, (arch, n)

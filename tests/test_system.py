@@ -1,0 +1,78 @@
+"""End-to-end paper-claim tests (scaled-down, fixed seeds).
+
+These assert the paper's *qualitative* claims on small workloads — the
+full-scale versions live in benchmarks/ and EXPERIMENTS.md.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import simulate
+from repro.core.scheduler import (ALL_POLICIES, EBPSM, EBPSM_NC, EBPSM_NS,
+                                  EBPSM_WS, MSLBL_MW)
+from repro.core.types import PlatformConfig
+from repro.workflows.workload import WorkloadSpec, generate_workload
+
+CFG = PlatformConfig()
+
+
+def mean_makespan(policy, rate, n=60, seed=2, sizes=("small", "medium")):
+    spec = WorkloadSpec(n_workflows=n, arrival_rate_per_min=rate, seed=seed,
+                        sizes=sizes)
+    res = simulate(CFG, policy, generate_workload(CFG, spec), seed=0)
+    return np.mean([w.makespan_ms for w in res.workflows]), res
+
+
+def test_sharing_beats_dedicated_at_high_rate():
+    """Fig. 3 claim: sharing variants improve with arrival density while
+    the dedicated (NS) baseline stays flat."""
+    mk_e_lo, _ = mean_makespan(EBPSM, 1.0)
+    mk_e_hi, _ = mean_makespan(EBPSM, 12.0)
+    mk_ns_lo, _ = mean_makespan(EBPSM_NS, 1.0)
+    mk_ns_hi, _ = mean_makespan(EBPSM_NS, 12.0)
+    assert mk_e_hi < mk_e_lo            # sharing improves with density
+    assert abs(mk_ns_hi - mk_ns_lo) / mk_ns_lo < 0.02   # NS flat
+    assert mk_e_hi < mk_ns_hi           # sharing beats dedicated
+
+
+def test_ebpsm_beats_mslbl_at_density():
+    mk_e, _ = mean_makespan(EBPSM, 12.0)
+    mk_m, _ = mean_makespan(MSLBL_MW, 12.0)
+    assert mk_e < mk_m
+
+
+def test_nc_marginally_better_than_containers():
+    """Fig. 3: container init delay costs a little; difference marginal."""
+    mk_e, _ = mean_makespan(EBPSM, 6.0)
+    mk_nc, _ = mean_makespan(EBPSM_NC, 6.0)
+    assert mk_nc <= mk_e
+    assert (mk_e - mk_nc) / mk_nc < 0.35
+
+
+def test_budget_met_rate():
+    """Fig. 4a claim: ≥95% budget-met (n=120 to keep CI fast)."""
+    spec = WorkloadSpec(n_workflows=120, arrival_rate_per_min=6.0, seed=5,
+                        sizes=("small", "medium"))
+    res = simulate(CFG, EBPSM, generate_workload(CFG, spec), seed=0)
+    assert res.budget_met_fraction >= 0.93
+
+
+def test_ebpsm_uses_fewer_vms_than_mslbl():
+    """Sharing + delayed reaping → fewer, better-utilized VMs."""
+    _, res_e = mean_makespan(EBPSM, 6.0)
+    _, res_m = mean_makespan(MSLBL_MW, 6.0)
+    assert res_e.total_vms < res_m.total_vms
+
+
+def test_degradation_sensitivity_ordering():
+    """Fig. 5 claim: EBPSM degrades more gracefully than MSLBL_MW."""
+    def run(policy, dmax):
+        cfg = CFG.with_(cpu_degradation_mean=dmax / 2,
+                        cpu_degradation_std=0.01, cpu_degradation_max=dmax)
+        spec = WorkloadSpec(n_workflows=40, arrival_rate_per_min=6.0,
+                            seed=4, sizes=("small",))
+        res = simulate(cfg, policy, generate_workload(cfg, spec), seed=0)
+        return res.budget_met_fraction
+
+    met_e = run(EBPSM, 0.6)
+    met_m = run(MSLBL_MW, 0.6)
+    assert met_e >= met_m - 0.05

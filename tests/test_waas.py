@@ -1,0 +1,82 @@
+"""WaaS→ML bridge: job DAGs, shared-weight locality, policy ordering."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import EBPSM, EBPSM_NS, MSLBL_MW
+from repro.waas import mljobs, slices
+from repro.waas.platform import (assign_budgets, compare_policies,
+                                 run_platform, straggler_experiment)
+
+
+def test_job_dags_valid():
+    rng = np.random.default_rng(0)
+    cost = mljobs.StageCostModel(art_dir="/nonexistent")  # analytic fallback
+    for arch in ("llama3-8b", "qwen2-moe-a2.7b", "hubert-xlarge",
+                 "mamba2-780m"):
+        ft = mljobs.finetune_job(0, arch, cost, rng)
+        ft.validate()
+        sv = mljobs.serve_job(1, arch, cost, rng)
+        sv.validate()
+        assert all(t.shared_in for t in ft.tasks[4:5])  # train tasks share
+        assert ft.n_tasks >= 8 and sv.n_tasks >= 5
+
+
+def test_encoder_serve_has_no_decode():
+    rng = np.random.default_rng(0)
+    cost = mljobs.StageCostModel(art_dir="/nonexistent")
+    sv = mljobs.serve_job(0, "hubert-xlarge", cost, rng, n_prefill=4)
+    # warm + 4 prefills + collect = 6 (no decode stages)
+    assert sv.n_tasks == 6
+
+
+def test_workload_poisson_arrivals():
+    wfs = mljobs.ml_workload(20, 3.0, seed=1, art_dir="/nonexistent")
+    arr = [w.arrival_ms for w in wfs]
+    assert arr == sorted(arr)
+    assert len({w.app for w in wfs}) > 3
+
+
+def test_ebpsm_beats_mslbl_on_platform():
+    cfg = slices.platform_config()
+    wfs = mljobs.ml_workload(25, 2.0, seed=3, art_dir="/nonexistent")
+    assign_budgets(cfg, wfs, seed=3)
+    r_e = run_platform(wfs, EBPSM, cfg, seed=0)
+    wfs = mljobs.ml_workload(25, 2.0, seed=3, art_dir="/nonexistent")
+    assign_budgets(cfg, wfs, seed=3)
+    r_m = run_platform(wfs, MSLBL_MW, cfg, seed=0)
+    assert r_e.mean_makespan_s < r_m.mean_makespan_s
+    assert r_e.locality_hit_rate > 0.15     # warm base-weight placements
+    assert r_m.locality_hit_rate == 0.0     # MSLBL ignores locality tiers
+
+
+def test_shared_weights_cross_tenant():
+    """Two tenants fine-tuning the same arch share warm slices under
+    EBPSM (tier-1 hits across wids) but not under EBPSM_NS."""
+    cfg = slices.platform_config()
+    rng = np.random.default_rng(5)
+    cost = mljobs.StageCostModel(art_dir="/nonexistent")
+    wfs = [mljobs.finetune_job(i, "llama3-8b", cost, rng) for i in range(4)]
+    for i, w in enumerate(wfs):
+        w.arrival_ms = i * 30_000
+    assign_budgets(cfg, wfs, seed=5)
+    r_share = run_platform(wfs, EBPSM, cfg, seed=0)
+    for w in wfs:
+        for t in w.tasks:
+            pass
+    rng = np.random.default_rng(5)
+    wfs = [mljobs.finetune_job(i, "llama3-8b", cost, rng) for i in range(4)]
+    for i, w in enumerate(wfs):
+        w.arrival_ms = i * 30_000
+    assign_budgets(cfg, wfs, seed=5)
+    r_ns = run_platform(wfs, EBPSM_NS, cfg, seed=0)
+    assert r_share.sim.total_vms <= r_ns.sim.total_vms
+
+
+def test_straggler_mitigation_trend():
+    out = straggler_experiment(n_jobs=12, rate=2.0, seed=2,
+                               degradations=(0.1, 0.5),
+                               art_dir="/nonexistent")
+    e = out["EBPSM"]
+    m = out["MSLBL_MW"]
+    # both degrade with stragglers, EBPSM stays ahead at high degradation
+    assert e[-1][1] <= m[-1][1]
