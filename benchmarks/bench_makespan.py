@@ -1,17 +1,31 @@
 """Fig. 3 + Fig. 4 — makespan / budget-met / VM usage across arrival rates
 for all five policies.  One simulation per (rate × policy) feeds both
 figures (the paper derives them from the same runs).
+
+Also times the same policy grid through the batched JAX engine
+(``core.jax_engine.simulate_batch``) against the sequential reference and
+reports the wall-clock speedup + result parity — the perf trajectory the
+CI artifact (BENCH_makespan.json) tracks.
 """
 from __future__ import annotations
 
+import copy
+import time
 from typing import Dict, List
 
-from repro.core.scheduler import ALL_POLICIES
+from repro.core.engine import SimEngine
+from repro.core.jax_engine import simulate_batch
+from repro.core.scheduler import ALL_POLICIES, EBPSM, EBPSM_NC, EBPSM_NS
 from repro.core.types import PlatformConfig
+from repro.workflows.workload import WorkloadSpec, generate_workload
 
 from .common import run_policy, summarize, write_csv
 
 RATES = (0.5, 1.0, 6.0, 12.0)
+
+# Ref-vs-batched comparison grid (EBPSM-family: the auctioned policies).
+CMP_POLICIES = (EBPSM, EBPSM_NS, EBPSM_NC)
+CMP_SEEDS = (0, 1)
 
 
 def run(full: bool = False) -> List[Dict]:
@@ -27,3 +41,63 @@ def run(full: bool = False) -> List[Dict]:
             rows.append(row)
     write_csv("fig3_fig4_makespan_budget_vm", rows)
     return rows
+
+
+def _cmp_workload(cfg: PlatformConfig, full: bool):
+    n = 120 if full else 40
+    spec = WorkloadSpec(n_workflows=n, arrival_rate_per_min=60.0, seed=17,
+                        sizes=("small", "medium") if full else ("small",),
+                        budget_lo=0.5, budget_hi=1.0)
+    return generate_workload(cfg, spec)
+
+
+def artifact(rows: List[Dict], full: bool = False) -> Dict:
+    """BENCH_makespan.json — sequential reference vs batched engine on the
+    same policy × seed grid: wall-clock speedup, scheduling decisions/sec,
+    and exactness check.  (At CI scale the queue×pool products stay below
+    the auction threshold, so this tracks lockstep overhead ≈ 1×; the
+    device win lives in the large-workflow regime and in
+    BENCH_sched_throughput.json.)"""
+    cfg = PlatformConfig()
+    wl = _cmp_workload(cfg, full)
+    n_tasks = sum(w.n_tasks for w in wl)
+
+    # Both sides start from the same pre-built workload and pay one deep
+    # copy per member — the walls measure engine work only, symmetrically.
+    t0 = time.perf_counter()
+    ref = {}
+    for pol in CMP_POLICIES:
+        for seed in CMP_SEEDS:
+            res = SimEngine(cfg, pol, copy.deepcopy(wl), seed=seed).run()
+            ref[(pol.name, seed)] = res
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    grid = simulate_batch(cfg, CMP_POLICIES, wl, seed=list(CMP_SEEDS))
+    t_bat = time.perf_counter() - t0
+
+    exact = all(
+        [w.finish_ms for w in ref[(e.policy, e.seed)].workflows]
+        == [w.finish_ms for w in e.result.workflows]
+        for e in grid.entries
+    )
+    mean_mk = {
+        e.policy: sum(w.makespan_ms for w in e.result.workflows)
+        / len(e.result.workflows) / 1000.0
+        for e in grid.entries if e.seed == CMP_SEEDS[0]
+    }
+    decisions = n_tasks * len(grid.entries)
+    return {
+        "bench": "makespan",
+        "scale": "full" if full else "ci",
+        "grid_members": len(grid.entries),
+        "tasks_per_member": n_tasks,
+        "ref_wall_s": t_ref,
+        "batched_wall_s": t_bat,
+        "speedup_batched_vs_ref": t_ref / t_bat if t_bat > 0 else 0.0,
+        "ref_decisions_per_sec": decisions / t_ref if t_ref > 0 else 0.0,
+        "batched_decisions_per_sec": decisions / t_bat if t_bat > 0 else 0.0,
+        "bit_exact": exact,
+        "mean_makespan_s_by_policy": mean_mk,
+        "fig_rows": len(rows),
+    }

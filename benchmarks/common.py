@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import csv
 import dataclasses
+import json
 import os
 import time
 from typing import Any, Dict, List, Optional, Sequence
@@ -66,6 +67,17 @@ def write_csv(name: str, rows: List[Dict[str, Any]]) -> str:
             w = csv.DictWriter(f, fieldnames=keys)
             w.writeheader()
             w.writerows(rows)
+    return path
+
+
+def write_json(name: str, payload: Dict[str, Any]) -> str:
+    """One JSON artifact per tracked benchmark (BENCH_<name>.json) so the
+    perf trajectory is diffable across PRs."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
     return path
 
 

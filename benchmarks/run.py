@@ -7,13 +7,14 @@ into artifacts/bench/.
 from __future__ import annotations
 
 import argparse
+import inspect
 import time
 import traceback
 
 from . import (bench_container_delay, bench_cost_ratio,
                bench_cpu_degradation, bench_makespan, bench_prov_delay,
                bench_roofline, bench_sched_throughput, bench_waas_ml)
-from .common import print_rows
+from .common import print_rows, write_json
 
 BENCHES = {
     "makespan": (bench_makespan, "Fig3+4 makespan/budget/VMs vs rate"),
@@ -33,6 +34,9 @@ def main() -> None:
                     help="paper-scale workloads (1000 workflows)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.only and args.only not in BENCHES:
+        raise SystemExit(
+            f"unknown benchmark {args.only!r}; choose from {sorted(BENCHES)}")
 
     failures = []
     for name, (mod, desc) in BENCHES.items():
@@ -44,6 +48,13 @@ def main() -> None:
             dt = time.time() - t0
             print(f"\n### {name},{dt:.1f}s — {desc} ({len(rows)} rows)")
             print_rows(name, rows[:24])
+            if hasattr(mod, "artifact"):
+                if "full" in inspect.signature(mod.artifact).parameters:
+                    art = mod.artifact(rows, full=args.full)
+                else:
+                    art = mod.artifact(rows)
+                path = write_json(f"BENCH_{name}", art)
+                print(f"artifact: {path}")
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             print(f"### {name} FAILED: {e}")

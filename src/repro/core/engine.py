@@ -4,9 +4,17 @@ Event-driven, heap-ordered, integer-millisecond clock.  Scheduling cycles run
 after all events at a timestamp are applied — exactly the paper's trigger
 rule ("the arrival of a new workflow's job and the completion of a task").
 
-This engine is the semantic oracle: the vectorized JAX engine
-(`core.jax_engine`) is property-tested against it, and the Pallas affinity
-kernel replicates its tier-selection rule bit-for-bit.
+The state-transition semantics live in :class:`SimState` — arrival / finish /
+VM_READY / REAP handling, the execution pipeline, budget redistribution via
+Algorithm 3, and the cycle commit protocol.  Two engines drive that one
+source of truth:
+
+* :class:`SimEngine` (here) — the sequential semantic oracle, one
+  (policy, workload) per run;
+* ``core.jax_engine.BatchSimEngine`` — lockstep rounds over a whole
+  experiment grid with the per-cycle scoring batched onto the device
+  (property-tested bit-exact against this engine in
+  ``tests/test_jax_engine.py``).
 """
 from __future__ import annotations
 
@@ -34,6 +42,9 @@ from ..sim.cloud import VM, VM_BUSY, VM_IDLE, VM_PROVISIONING, DataKey, VMPool
 
 ARRIVAL, FINISH, VM_READY, REAP = 0, 1, 2, 3
 
+# Queue-order metadata for one cycle's drained tasks: (wid, tid, inputs).
+CycleMeta = Tuple[int, int, List[Tuple[DataKey, float]]]
+
 
 @dataclasses.dataclass
 class _WfState:
@@ -55,8 +66,13 @@ class _Running:
     actual_cost: float = 0.0
 
 
-class SimEngine:
-    """One policy × one workload → SimResult."""
+class SimState:
+    """One simulation's mutable state + the transition semantics.
+
+    Engine-agnostic: every method advances state deterministically; *when*
+    events are drained and *how* the scheduling cycle is scored is the
+    driving engine's business.
+    """
 
     def __init__(
         self,
@@ -65,15 +81,9 @@ class SimEngine:
         workflows: Sequence[Workflow],
         seed: int = 0,
         trace: bool = False,
-        batched: object = "auto",
     ):
-        """``batched``: True / False / "auto" — use the JAX batched
-        scheduling cycle (core.jax_cycles) when the queue×pool product is
-        large.  EBPSM-family policies only; MSLBL mutates spare budget
-        mid-cycle and stays sequential."""
         self.cfg = cfg
         self.policy = policy
-        self.batched = batched
         self.workflows = list(workflows)
         self.pool = VMPool(cfg)
         self.queue: List[Tuple[int, int, int]] = []  # (est_ms, wid, tid)
@@ -104,53 +114,39 @@ class SimEngine:
     def _gid(self, wid: int, tid: int) -> int:
         return self._task_base[wid] + tid
 
-    # ---- main loop -----------------------------------------------------------
-    def run(self) -> SimResult:
-        t0 = _time.time()
+    def seed_arrivals(self) -> None:
         for wf in self.workflows:
             self._push(wf.arrival_ms, ARRIVAL, (wf.wid,))
-        while self.events:
-            t_ms = self.events[0][0]
-            self.now = t_ms
-            need_cycle = False
-            while self.events and self.events[0][0] == t_ms:
-                _, _, kind, payload = heapq.heappop(self.events)
-                self.n_events += 1
-                if kind == ARRIVAL:
-                    self._handle_arrival(payload[0])
-                    need_cycle = True
-                elif kind == FINISH:
-                    self._handle_finish(*payload)
-                    need_cycle = True
-                elif kind == VM_READY:
-                    self._handle_vm_ready(payload[0])
-                elif kind == REAP:
-                    self._handle_reap(*payload)
-            if need_cycle:
-                self._schedule_cycle()
-                if self.policy.idle_threshold_ms == 0:
-                    self._reap_now()
-        self.pool.finalize(self.now)
-        results = [
-            WorkflowResult(
-                wid=s.wf.wid,
-                app=s.wf.app,
-                n_tasks=s.wf.n_tasks,
-                budget=s.wf.budget,
-                cost=s.cost,
-                arrival_ms=s.wf.arrival_ms,
-                finish_ms=s.finish_ms,
-            )
-            for s in self.wf_state.values()
-        ]
-        return SimResult(
-            workflows=results,
-            vm_seconds_by_type=self.pool.vm_seconds_by_type,
-            vm_busy_seconds_by_type=self.pool.vm_busy_seconds_by_type,
-            vm_count_by_type=self.pool.vm_count_by_type,
-            total_events=self.n_events,
-            wall_s=_time.time() - t0,
-        )
+
+    @property
+    def done(self) -> bool:
+        return not self.events
+
+    def advance(self) -> bool:
+        """Drain every event at the next timestamp; True ⇒ a scheduling
+        cycle must follow (the paper's trigger rule)."""
+        t_ms = self.events[0][0]
+        self.now = t_ms
+        need_cycle = False
+        while self.events and self.events[0][0] == t_ms:
+            _, _, kind, payload = heapq.heappop(self.events)
+            self.n_events += 1
+            if kind == ARRIVAL:
+                self._handle_arrival(payload[0])
+                need_cycle = True
+            elif kind == FINISH:
+                self._handle_finish(*payload)
+                need_cycle = True
+            elif kind == VM_READY:
+                self._handle_vm_ready(payload[0])
+            elif kind == REAP:
+                self._handle_reap(*payload)
+        return need_cycle
+
+    def post_cycle(self) -> None:
+        """Deprovisioning step that follows every scheduling cycle."""
+        if self.policy.idle_threshold_ms == 0:
+            self.reap_now()
 
     # ---- handlers --------------------------------------------------------------
     def _handle_arrival(self, wid: int) -> None:
@@ -234,25 +230,15 @@ class SimEngine:
         if vm.status == VM_IDLE and vm.idle_since_ms == idle_marker_ms:
             self.pool.terminate(vm, self.now)
 
-    def _reap_now(self) -> None:
+    def reap_now(self) -> None:
         for vm in self.pool.idle_vms():
             self.pool.terminate(vm, self.now)
 
-    # ---- scheduling cycle (Alg. 2 driver) ------------------------------------
-    def _use_batched(self, n_queue: int, n_idle: int) -> bool:
-        if self.policy.budget_mode != "ebpsm":
-            return False
-        if self.batched is True:
-            return True
-        if self.batched == "auto":
-            return n_queue * n_idle >= 8192
-        return False
-
-    def _schedule_cycle(self) -> None:
-        idle = self.pool.idle_vms()
-        if self.queue and self._use_batched(len(self.queue), len(idle)):
-            self._schedule_cycle_batched(idle)
-            return
+    # ---- scheduling cycles (Alg. 2) ------------------------------------------
+    def sequential_cycle(self, idle: Optional[List[VM]] = None) -> None:
+        """Per-task reference cycle: drain the ready queue in order, calling
+        ``scheduler.select`` against the live idle pool for each task."""
+        idle = self.pool.idle_vms() if idle is None else idle
         while self.queue:
             est, wid, tid = heapq.heappop(self.queue)
             st = self.wf_state[wid]
@@ -294,17 +280,15 @@ class SimEngine:
                      placement.vm.vmid if placement.vm else -1)
                 )
 
-    def _schedule_cycle_batched(self, idle: List[VM]) -> None:
-        """Whole-queue scheduling via the JAX affinity kernel + auction
-        (core.jax_cycles).  Matches the sequential outcome exactly while
-        budgets are sufficient (see jax_cycles docstring)."""
-        from .jax_cycles import batched_cycle
-
+    def drain_queue_for_cycle(self) -> Tuple[list, List[CycleMeta]]:
+        """Pop the whole ready queue in heap order; returns the
+        (task, app, owner_tag, inputs) rows the auction scores plus the
+        (wid, tid, inputs) metadata the commit step needs."""
         ordered = []
         while self.queue:
             ordered.append(heapq.heappop(self.queue))
         tasks = []
-        metas = []
+        metas: List[CycleMeta] = []
         for est, wid, tid in ordered:
             st = self.wf_state[wid]
             task = st.wf.tasks[tid]
@@ -312,8 +296,18 @@ class SimEngine:
             inputs = self._inputs_of(st.wf, task)
             tasks.append((task, st.wf.app, tag, inputs))
             metas.append((wid, tid, inputs))
-        placements = batched_cycle(self.cfg, self.policy, tasks, idle,
-                                   self.pool.data_index)
+        return tasks, metas
+
+    def apply_cycle_placements(
+        self,
+        metas: Sequence[CycleMeta],
+        placements: Sequence[Optional[Placement]],
+        idle: List[VM],
+    ) -> None:
+        """Commit an auction's outcome in queue order.  ``None`` placements
+        fall back to the per-task reference selection against the VMs the
+        auction left untaken (provisioning can't conflict, so the fallback
+        is final)."""
         remaining = {vm.vmid for vm in idle}
         for (wid, tid, inputs), p in zip(metas, placements):
             st = self.wf_state[wid]
@@ -371,6 +365,88 @@ class SimEngine:
         run = _Running(wid, tid, vm, triggered_provision, actual_cost)
         self.running[(wid, tid)] = run
         self._push(finish, FINISH, (wid, tid))
+
+    # ---- results ---------------------------------------------------------------
+    def finalize(self, wall_s: float = 0.0) -> SimResult:
+        self.pool.finalize(self.now)
+        results = [
+            WorkflowResult(
+                wid=s.wf.wid,
+                app=s.wf.app,
+                n_tasks=s.wf.n_tasks,
+                budget=s.wf.budget,
+                cost=s.cost,
+                arrival_ms=s.wf.arrival_ms,
+                finish_ms=s.finish_ms,
+            )
+            for s in self.wf_state.values()
+        ]
+        return SimResult(
+            workflows=results,
+            vm_seconds_by_type=self.pool.vm_seconds_by_type,
+            vm_busy_seconds_by_type=self.pool.vm_busy_seconds_by_type,
+            vm_count_by_type=self.pool.vm_count_by_type,
+            total_events=self.n_events,
+            wall_s=wall_s,
+        )
+
+
+class SimEngine(SimState):
+    """One policy × one workload → SimResult (sequential driver)."""
+
+    def __init__(
+        self,
+        cfg: PlatformConfig,
+        policy: Policy,
+        workflows: Sequence[Workflow],
+        seed: int = 0,
+        trace: bool = False,
+        batched: object = "auto",
+    ):
+        """``batched``: True / False / "auto" — use the JAX batched
+        scheduling cycle (core.jax_cycles) when the queue×pool product is
+        large.  EBPSM-family policies only; MSLBL mutates spare budget
+        mid-cycle and stays sequential."""
+        super().__init__(cfg, policy, workflows, seed=seed, trace=trace)
+        self.batched = batched
+
+    # ---- main loop -----------------------------------------------------------
+    def run(self) -> SimResult:
+        t0 = _time.time()
+        self.seed_arrivals()
+        while self.events:
+            if self.advance():
+                self._schedule_cycle()
+                self.post_cycle()
+        return self.finalize(wall_s=_time.time() - t0)
+
+    # ---- scheduling cycle (Alg. 2 driver) ------------------------------------
+    def _use_batched(self, n_queue: int, n_idle: int) -> bool:
+        if self.policy.budget_mode != "ebpsm":
+            return False
+        if self.batched is True:
+            return True
+        if self.batched == "auto":
+            return n_queue * n_idle >= 8192
+        return False
+
+    def _schedule_cycle(self) -> None:
+        idle = self.pool.idle_vms()
+        if self.queue and self._use_batched(len(self.queue), len(idle)):
+            self._schedule_cycle_batched(idle)
+            return
+        self.sequential_cycle()
+
+    def _schedule_cycle_batched(self, idle: List[VM]) -> None:
+        """Whole-queue scheduling via the JAX affinity kernel + auction
+        (core.jax_cycles).  Matches the sequential outcome exactly while
+        budgets are sufficient (see jax_cycles docstring)."""
+        from .jax_cycles import batched_cycle
+
+        tasks, metas = self.drain_queue_for_cycle()
+        placements = batched_cycle(self.cfg, self.policy, tasks, idle,
+                                   self.pool.data_index)
+        self.apply_cycle_placements(metas, placements, idle)
 
 
 def simulate(

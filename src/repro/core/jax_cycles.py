@@ -12,6 +12,15 @@ outcome exactly — property-tested in tests/test_jax_cycles.py.
 Tier encoding per (task, VM): 0 = out of scope (busy/wrong owner),
 1 = all inputs cached, 2 = container active, 3 = idle.  Provisioning
 (tier 4/5) can't conflict and stays in the per-task fallback.
+
+Two drivers consume the auction:
+
+* :func:`batched_cycle` — one simulation's cycle (used by ``SimEngine``
+  when the queue×pool product is large);
+* :func:`multi_cycle` — many independent simulations' cycles at once
+  (used by ``core.jax_engine.BatchSimEngine``): each round stacks every
+  active member's proposal into one ``[B, T, V]`` tensor and scores it
+  with a single vmapped kernel call.
 """
 from __future__ import annotations
 
@@ -46,8 +55,6 @@ def build_pair_arrays(cfg: PlatformConfig, policy: Policy,
     # Per-(vm, app) container state, computed once per distinct app.
     apps = sorted({app for _, app, _, _ in tasks})
     cont_by_app = {}
-    active = np.array([hash(vm.active_container) if vm.active_container
-                       else 0 for vm in vms])
     for app in apps:
         cvec = np.array([vm.container_ms(cfg, app, policy.use_containers)
                          for vm in vms], np.float32)
@@ -85,6 +92,142 @@ def build_pair_arrays(cfg: PlatformConfig, policy: Policy,
     return (size, out_mb, budget, missing, cont, tier, mips, bw, price)
 
 
+def _p2(n: int) -> int:
+    """Next power of two ≥ max(n, 2) — shape buckets so the jitted kernel
+    is reused across cycles instead of recompiling per shape (padding
+    rows/cols are tier-0 ⇒ infeasible ⇒ inert)."""
+    return 1 << max(n - 1, 1).bit_length()
+
+
+class CycleRequest:
+    """One simulation's auction state inside a (possibly multi-sim) cycle.
+
+    Owns the pair arrays, the queue-order task list, the availability
+    mask, and the serial-dictatorship commit rule.  ``multi_cycle`` only
+    orchestrates rounds; all per-simulation semantics live here.
+    """
+
+    def __init__(self, cfg: PlatformConfig, policy: Policy,
+                 tasks, vms: Sequence[VM],
+                 data_index: Dict[DataKey, set]):
+        self.vms = list(vms)
+        T, V = len(tasks), len(vms)
+        self.T, self.V = T, V
+        self.placements: List[Optional[Placement]] = [None] * T
+        self.unplaced: List[int] = list(range(T)) if V else []
+        self.avail = np.ones(V, bool)
+        self.stalled = False
+        if T and V:
+            (self.size, self.out_mb, self.budget, self.missing, self.cont,
+             self.tier, self.mips, self.bw, self.price) = build_pair_arrays(
+                cfg, policy, tasks, vms, data_index)
+
+    @property
+    def active(self) -> bool:
+        return bool(self.unplaced) and bool(self.avail.any()) \
+            and not self.stalled
+
+    def propose(self, Tp: int, Vp: int):
+        """Pad this member's current unplaced rows into the shared
+        ``(Tp, Vp)`` bucket.  Padding is inert: tier 0, budget −1,
+        mips/bw/price 1 (no div-by-zero)."""
+        sel = self.unplaced
+        Tr, V = len(sel), self.V
+        pr = (0, Tp - Tr)
+        pc = (0, Vp - V)
+        avail_p = np.pad(self.avail, pc)
+        t_eff = np.pad(
+            np.pad(self.tier[sel], ((0, 0), pc))
+            * avail_p[None, :].astype(np.int32),
+            (pr, (0, 0)))
+        return (np.pad(self.size[sel], pr),
+                np.pad(self.out_mb[sel], pr),
+                np.pad(self.budget[sel], pr, constant_values=-1.0),
+                np.pad(self.missing[sel], (pr, pc)),
+                np.pad(self.cont[sel], (pr, pc)),
+                t_eff,
+                np.pad(self.mips, pc, constant_values=1.0),
+                np.pad(self.bw, pc, constant_values=1.0),
+                np.pad(self.price, pc, constant_values=1.0))
+
+    def commit(self, best, tiers, fins, costs_) -> None:
+        """Serial-dictatorship prefix commit: the winner of each VM is its
+        earliest claimant, and only winners EARLIER than the first loser
+        commit this round.  A later round-1 winner could otherwise steal
+        the VM an earlier loser takes next — exactly the interleaving
+        the sequential reference produces.  Tasks with no feasible VM
+        (best < 0) resolve immediately: their availability set is a
+        superset of the sequential one (only earlier tasks have
+        committed), so sequential would provision too."""
+        claims: dict = {}
+        for row, ti in enumerate(self.unplaced):
+            j = int(best[row])
+            if j >= 0 and j not in claims:
+                claims[j] = ti
+        losers = [ti for row, ti in enumerate(self.unplaced)
+                  if int(best[row]) >= 0 and claims[int(best[row])] != ti]
+        first_loser = min(losers) if losers else None
+        next_unplaced = []
+        committed = False
+        for row, ti in enumerate(self.unplaced):
+            j = int(best[row])
+            if j < 0:
+                continue  # provisioning fallback (final)
+            if claims[j] == ti and (first_loser is None or ti < first_loser):
+                self.placements[ti] = Placement(
+                    self.vms[j], None, int(tiers[row]),
+                    int(fins[row]), float(costs_[row]))
+                self.avail[j] = False
+                committed = True
+            else:
+                next_unplaced.append(ti)
+        self.unplaced = next_unplaced
+        self.stalled = not committed
+
+
+def multi_cycle(cfg: PlatformConfig, requests: Sequence[CycleRequest],
+                use_pallas: bool = False
+                ) -> List[List[Optional[Placement]]]:
+    """Run every request's auction to its fixed point, scoring all active
+    members' rounds with ONE batched kernel call per round.
+
+    Members are independent simulations, so rounds interleave freely; a
+    member drops out as soon as it has no unplaced task, no available VM,
+    or a round commits nothing.  The batch is padded to power-of-two
+    (B, T, V) buckets so the vmapped kernel recompiles per bucket, not
+    per round.
+    """
+    while True:
+        active = [r for r in requests if r.active]
+        if not active:
+            break
+        Tp = max(_p2(len(r.unplaced)) for r in active)
+        Vp = max(_p2(r.V) for r in active)
+        # Batch dim rounds to 1, 2, 4, … (a solo auction stays unpadded).
+        Bp = 1 << max(len(active) - 1, 0).bit_length()
+        proposals = [r.propose(Tp, Vp) for r in active]
+        # Inert members pad the batch dim: tier-0 rows place nothing.
+        while len(proposals) < Bp:
+            proposals.append((
+                np.zeros(Tp, np.float32), np.zeros(Tp, np.float32),
+                np.full(Tp, -1.0, np.float32), np.zeros((Tp, Vp), np.float32),
+                np.zeros((Tp, Vp), np.float32), np.zeros((Tp, Vp), np.int32),
+                np.ones(Vp, np.float32), np.ones(Vp, np.float32),
+                np.ones(Vp, np.float32)))
+        stacked = [np.stack(cols) for cols in zip(*proposals)]
+        res = aff_ops.affinity_batch(
+            *stacked,
+            gs_read=cfg.gs_read_mbps, gs_write=cfg.gs_write_mbps,
+            bp_ms=float(cfg.billing_period_ms), use_pallas=use_pallas)
+        best = np.asarray(res.best_vm)
+        tiers = np.asarray(res.best_tier)
+        fins = np.asarray(res.est_finish)
+        costs_ = np.asarray(res.est_cost)
+        for b, r in enumerate(active):
+            r.commit(best[b], tiers[b], fins[b], costs_[b])
+    return [r.placements for r in requests]
+
+
 def batched_cycle(cfg: PlatformConfig, policy: Policy,
                   tasks, vms: Sequence[VM], data_index,
                   use_pallas: bool = False
@@ -95,77 +238,5 @@ def batched_cycle(cfg: PlatformConfig, policy: Policy,
         return []
     if not vms:
         return [None] * len(tasks)
-    arrays = build_pair_arrays(cfg, policy, tasks, vms, data_index)
-    size, out_mb, budget, missing, cont, tier, mips, bw, price = arrays
-    T, V = tier.shape
-    placements: List[Optional[Placement]] = [None] * T
-    unplaced = list(range(T))
-    avail = np.ones(V, bool)
-
-    # Pad (T, V) to power-of-two buckets so the jitted kernel is reused
-    # across cycles instead of recompiling per shape (padding rows/cols
-    # are tier-0 ⇒ infeasible ⇒ inert).
-    def p2(n: int) -> int:
-        return 1 << max(n - 1, 1).bit_length()
-
-    Vp = p2(V)
-    missing_p, cont_p, tier_p = (np.pad(missing, ((0, 0), (0, Vp - V))),
-                                 np.pad(cont, ((0, 0), (0, Vp - V))),
-                                 np.pad(tier, ((0, 0), (0, Vp - V))))
-    mips_p = np.pad(mips, (0, Vp - V), constant_values=1.0)
-    bw_p = np.pad(bw, (0, Vp - V), constant_values=1.0)
-    price_p = np.pad(price, (0, Vp - V), constant_values=1.0)
-
-    while unplaced and avail.any():
-        Tr = len(unplaced)
-        Tp = p2(Tr)
-        pr = (0, Tp - Tr)
-        avail_p = np.pad(avail, (0, Vp - V))
-        t_eff = np.pad(tier_p[unplaced] * avail_p[None, :].astype(np.int32),
-                       (pr, (0, 0)))
-        res = aff_ops.affinity(
-            np.pad(size[unplaced], pr), np.pad(out_mb[unplaced], pr),
-            np.pad(budget[unplaced], pr, constant_values=-1.0),
-            np.pad(missing_p[unplaced], (pr, (0, 0))),
-            np.pad(cont_p[unplaced], (pr, (0, 0))), t_eff,
-            mips_p, bw_p, price_p,
-            gs_read=cfg.gs_read_mbps, gs_write=cfg.gs_write_mbps,
-            bp_ms=float(cfg.billing_period_ms), use_pallas=use_pallas)
-        best = np.asarray(res.best_vm)[:Tr]
-        tiers = np.asarray(res.best_tier)[:Tr]
-        fins = np.asarray(res.est_finish)[:Tr]
-        costs_ = np.asarray(res.est_cost)[:Tr]
-
-        # Serial-dictatorship prefix commit: the winner of each VM is its
-        # earliest claimant, and only winners EARLIER than the first loser
-        # commit this round.  A later round-1 winner could otherwise steal
-        # the VM an earlier loser takes next — exactly the interleaving
-        # the sequential reference produces.  Tasks with no feasible VM
-        # (best < 0) resolve immediately: their availability set is a
-        # superset of the sequential one (only earlier tasks have
-        # committed), so sequential would provision too.
-        claims: dict = {}
-        for row, ti in enumerate(unplaced):
-            j = int(best[row])
-            if j >= 0 and j not in claims:
-                claims[j] = ti
-        losers = [ti for row, ti in enumerate(unplaced)
-                  if int(best[row]) >= 0 and claims[int(best[row])] != ti]
-        first_loser = min(losers) if losers else None
-        next_unplaced = []
-        committed = False
-        for row, ti in enumerate(unplaced):
-            j = int(best[row])
-            if j < 0:
-                continue  # provisioning fallback (final)
-            if claims[j] == ti and (first_loser is None or ti < first_loser):
-                placements[ti] = Placement(vms[j], None, int(tiers[row]),
-                                           int(fins[row]), float(costs_[row]))
-                avail[j] = False
-                committed = True
-            else:
-                next_unplaced.append(ti)
-        unplaced = next_unplaced
-        if not committed:
-            break
-    return placements
+    req = CycleRequest(cfg, policy, tasks, vms, data_index)
+    return multi_cycle(cfg, [req], use_pallas=use_pallas)[0]

@@ -1,4 +1,13 @@
-"""jit'd dispatcher for the affinity scoring: Pallas kernel or jnp oracle."""
+"""jit'd dispatchers for the affinity scoring: Pallas kernel or jnp oracle.
+
+Two entry points share one core:
+
+* :func:`affinity` — one scheduling cycle, ``[T, V]`` pair arrays.
+* :func:`affinity_batch` — a whole grid of independent simulations'
+  cycles, ``[B, T, V]`` (vmapped over the leading dim).  This is what
+  ``core.jax_engine`` drives: one device pass scores every member's
+  auction round.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -14,10 +23,9 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("gs_read", "gs_write", "bp_ms", "use_pallas"))
-def affinity(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
-             vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
-             bp_ms: float, use_pallas: bool = False) -> AffinityOut:
+def _affinity_core(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+                   vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
+                   bp_ms: float, use_pallas: bool) -> AffinityOut:
     if use_pallas:
         vm, t, f, c = affinity_pallas(
             size_mi, out_mb, budget, missing_mb, cont_ms, tier,
@@ -26,3 +34,30 @@ def affinity(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
         return AffinityOut(vm, t, f, c)
     return affinity_ref(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
                         vm_mips, vm_bw, vm_price, gs_read, gs_write, bp_ms)
+
+
+@partial(jax.jit, static_argnames=("gs_read", "gs_write", "bp_ms", "use_pallas"))
+def affinity(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+             vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
+             bp_ms: float, use_pallas: bool = False) -> AffinityOut:
+    return _affinity_core(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+                          vm_mips, vm_bw, vm_price, gs_read, gs_write, bp_ms,
+                          use_pallas)
+
+
+@partial(jax.jit, static_argnames=("gs_read", "gs_write", "bp_ms", "use_pallas"))
+def affinity_batch(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+                   vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
+                   bp_ms: float, use_pallas: bool = False) -> AffinityOut:
+    """Batched affinity: every array carries a leading simulation dim ``B``.
+
+    Task arrays are ``[B, T]``, pair arrays ``[B, T, V]``, VM arrays
+    ``[B, V]`` (members may pool different VM fleets).  Inert members pad
+    with ``tier = 0`` rows, which are infeasible by construction.
+    """
+    def one(s, o, b, m, c, t, mi, bw, pr):
+        return _affinity_core(s, o, b, m, c, t, mi, bw, pr,
+                              gs_read, gs_write, bp_ms, use_pallas)
+
+    return jax.vmap(one)(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+                         vm_mips, vm_bw, vm_price)

@@ -9,6 +9,7 @@ data-sharing claim restated for ML), and a straggler-recovery comparison.
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -16,6 +17,7 @@ import numpy as np
 
 from ..core import budget as budget_mod
 from ..core.engine import SimEngine
+from ..core.jax_engine import BatchSimEngine, GridMember
 from ..core.scheduler import ALL_POLICIES, EBPSM, MSLBL_MW, Policy
 from ..core.types import PlatformConfig, SimResult, Workflow
 from . import mljobs, slices
@@ -81,6 +83,43 @@ def compare_policies(n_jobs: int = 40, rate: float = 2.0, seed: int = 0,
         assign_budgets(cfg, wfs, seed=seed)
         reports.append(run_platform(wfs, pol, cfg, seed=seed))
     return reports
+
+
+def sweep(n_jobs: int = 24, rates: Sequence[float] = (1.0, 4.0),
+          seeds: Sequence[int] = (0,),
+          policies: Sequence[Policy] = ALL_POLICIES,
+          cfg: Optional[PlatformConfig] = None,
+          art_dir: str = "artifacts/dryrun") -> List[Dict]:
+    """The full experiment grid — policy × arrival rate × seed — in ONE
+    batched engine run (core.jax_engine).
+
+    Each (rate, seed) pair generates one workload; every policy simulates
+    a deep copy of it, so the comparison is paired exactly as in the
+    paper.  Returns one summary row per grid cell.
+    """
+    cfg = cfg or slices.platform_config()
+    members: List[GridMember] = []
+    labels: List[Tuple[str, float, int]] = []
+    for rate in rates:
+        for s in seeds:
+            wfs = mljobs.ml_workload(n_jobs, rate, seed=s, art_dir=art_dir)
+            assign_budgets(cfg, wfs, seed=s)
+            for pol in policies:
+                members.append((pol, copy.deepcopy(wfs), s))
+                labels.append((pol.name, rate, s))
+    results = BatchSimEngine(cfg, members).run()
+    rows: List[Dict] = []
+    for (name, rate, s), res in zip(labels, results):
+        mks = np.array([w.makespan_ms for w in res.workflows]) / 1000.0
+        rows.append({
+            "policy": name, "rate_wf_per_min": rate, "seed": s,
+            "mean_makespan_s": float(mks.mean()),
+            "p95_makespan_s": float(np.percentile(mks, 95)),
+            "budget_met": res.budget_met_fraction,
+            "utilization": res.avg_vm_utilization,
+            "total_vms": res.total_vms,
+        })
+    return rows
 
 
 def straggler_experiment(n_jobs: int = 30, rate: float = 2.0, seed: int = 0,

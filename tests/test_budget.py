@@ -1,6 +1,8 @@
 """Property tests for Algorithms 1 & 3 (budget distribution / update)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import budget as bmod

@@ -1,0 +1,121 @@
+"""Batched JAX engine (core.jax_engine) ≡ sequential reference (SimEngine).
+
+The parity suite draws budgets from the upper half of [min, max] — the
+paper's "budgets always assumed sufficient" regime, where the auction's
+fixed point provably equals the sequential interleaving (see
+core.jax_cycles).  MSLBL members exercise the shared per-task path, so
+their parity is unconditional.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import SimEngine
+from repro.core.jax_engine import BatchSimEngine, simulate_batch
+from repro.core.scheduler import ALL_POLICIES, EBPSM, EBPSM_NC, MSLBL_MW
+from repro.core.types import PlatformConfig
+from repro.workflows.workload import WorkloadSpec, generate_workload
+
+CFG = PlatformConfig()
+
+POLICY_BY_NAME = {p.name: p for p in ALL_POLICIES}
+
+
+def workload(seed, n=8, rate=6.0):
+    spec = WorkloadSpec(n_workflows=n, arrival_rate_per_min=rate, seed=seed,
+                        sizes=("small",), budget_lo=0.5, budget_hi=1.0)
+    return generate_workload(CFG, spec)
+
+
+def assert_same(ref, res):
+    assert [w.finish_ms for w in ref.workflows] == \
+        [w.finish_ms for w in res.workflows]
+    assert [w.cost for w in ref.workflows] == \
+        [w.cost for w in res.workflows]
+    assert ref.vm_count_by_type == res.vm_count_by_type
+    assert ref.vm_seconds_by_type == res.vm_seconds_by_type
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES, ids=lambda p: p.name)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_simulate_batch_matches_reference(policy, seed):
+    """Bit-exact makespans/costs for every policy across ≥3 seeds, with
+    the auction forced on (the batched engine's raison d'être)."""
+    ref = SimEngine(CFG, policy, workload(seed), seed=seed).run()
+    res = simulate_batch(CFG, policy, workload(seed), seed=seed,
+                         batched=True).results[0]
+    assert_same(ref, res)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_simulate_batch_auto_matches_reference(seed):
+    """Default ("auto") batching: decisions match SimEngine path-for-path."""
+    ref = SimEngine(CFG, EBPSM, workload(seed), seed=seed).run()
+    res = simulate_batch(CFG, EBPSM, workload(seed), seed=seed).results[0]
+    assert_same(ref, res)
+
+
+def test_grid_members_are_independent():
+    """A full policies × workloads × seeds grid in ONE lockstep run matches
+    each member simulated alone — interleaving leaks no state."""
+    grid = simulate_batch(CFG, ALL_POLICIES, [workload(0), workload(3)],
+                          seed=[0, 5], batched=True)
+    assert len(grid.entries) == len(ALL_POLICIES) * 2 * 2
+    for e in grid.entries:
+        ref = SimEngine(CFG, POLICY_BY_NAME[e.policy],
+                        workload((0, 3)[e.workload]), seed=e.seed).run()
+        assert_same(ref, e.result)
+
+
+def test_trace_matches_reference():
+    """Placement-level parity: same (time, task, tier, cost, vm) rows."""
+    ref = SimEngine(CFG, EBPSM, workload(4), seed=0, batched=False,
+                    trace=True)
+    ref.run()
+    eng = BatchSimEngine(CFG, [(EBPSM, workload(4), 0)], trace=True,
+                         batched=True)
+    eng.run()
+    assert eng.states[0].trace_rows == ref.trace_rows
+
+
+def test_workloads_not_mutated_by_grid():
+    """simulate_batch deep-copies members; caller workflows stay pristine."""
+    wl = workload(2)
+    budgets_before = [[t.budget for t in wf.tasks] for wf in wl]
+    simulate_batch(CFG, [EBPSM, EBPSM_NC], wl, seed=[0, 1])
+    budgets_after = [[t.budget for t in wf.tasks] for wf in wl]
+    assert budgets_before == budgets_after
+
+
+def test_batched_calls_are_shared():
+    """The whole grid's cycles ride a shared batched scoring pass: the
+    number of device auction calls must be far below the per-member sum."""
+    members = [(EBPSM, workload(s), s) for s in range(4)]
+    eng = BatchSimEngine(CFG, members, batched=True)
+    eng.run()
+    solo_calls = 0
+    for s in range(4):
+        solo = BatchSimEngine(CFG, [(EBPSM, workload(s), s)], batched=True)
+        solo.run()
+        solo_calls += solo.batched_calls
+    assert eng.batched_calls > 0
+    assert eng.batched_calls < solo_calls
+
+
+def test_mslbl_member_in_mixed_grid():
+    """MSLBL members (sequential path) coexist with auctioned EBPSM
+    members in one lockstep run."""
+    grid = simulate_batch(CFG, [EBPSM, MSLBL_MW], workload(1), seed=2,
+                          batched=True)
+    for e in grid.entries:
+        ref = SimEngine(CFG, POLICY_BY_NAME[e.policy], workload(1),
+                        seed=2).run()
+        assert_same(ref, e.result)
+
+
+def test_all_tasks_complete_batch():
+    grid = simulate_batch(CFG, ALL_POLICIES, workload(6, n=6), seed=0)
+    for e in grid.entries:
+        assert len(e.result.workflows) == 6
+        for w in e.result.workflows:
+            assert w.finish_ms >= w.arrival_ms
+            assert w.cost > 0

@@ -96,6 +96,10 @@ print("MULTIDEV-OK")
 def test_sharded_train_step_matches_single_device():
     """8 fake host devices: sharded MoE train step ≈ single-device step."""
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           # Force the CPU backend: without it, a TPU-enabled jaxlib probes
+           # the GCE metadata server (30 retries per variable ⇒ minutes of
+           # hang) before falling back.  Fake host devices are CPU anyway.
+           "JAX_PLATFORMS": "cpu",
            "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
     r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT], env=env,
                        capture_output=True, text=True, cwd=".", timeout=420)

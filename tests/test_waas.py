@@ -80,3 +80,21 @@ def test_straggler_mitigation_trend():
     m = out["MSLBL_MW"]
     # both degrade with stragglers, EBPSM stays ahead at high degradation
     assert e[-1][1] <= m[-1][1]
+
+
+def test_sweep_grid():
+    """waas.platform.sweep: one batched run covers policy × rate × seed,
+    and each cell matches a standalone run_platform simulation."""
+    from repro.waas.platform import sweep
+    rows = sweep(n_jobs=6, rates=(2.0,), seeds=(0,),
+                 policies=(EBPSM, MSLBL_MW), art_dir="/nonexistent")
+    assert len(rows) == 2
+    by_pol = {r["policy"]: r for r in rows}
+    cfg = slices.platform_config()
+    for pol in (EBPSM, MSLBL_MW):
+        wfs = mljobs.ml_workload(6, 2.0, seed=0, art_dir="/nonexistent")
+        assign_budgets(cfg, wfs, seed=0)
+        rep = run_platform(wfs, pol, cfg, seed=0)
+        assert by_pol[pol.name]["mean_makespan_s"] == \
+            pytest.approx(rep.mean_makespan_s)
+        assert by_pol[pol.name]["budget_met"] == pytest.approx(rep.budget_met)
