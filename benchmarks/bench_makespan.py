@@ -9,14 +9,13 @@ CI artifact (BENCH_makespan.json) tracks.
 """
 from __future__ import annotations
 
-import copy
 import time
 from typing import Dict, List
 
 from repro.core.engine import SimEngine
 from repro.core.jax_engine import simulate_batch
 from repro.core.scheduler import ALL_POLICIES, EBPSM, EBPSM_NC, EBPSM_NS
-from repro.core.types import PlatformConfig
+from repro.core.types import PlatformConfig, clone_workload
 from repro.workflows.workload import WorkloadSpec, generate_workload
 
 from .common import run_policy, summarize, write_csv
@@ -25,7 +24,7 @@ RATES = (0.5, 1.0, 6.0, 12.0)
 
 # Ref-vs-batched comparison grid (EBPSM-family: the auctioned policies).
 CMP_POLICIES = (EBPSM, EBPSM_NS, EBPSM_NC)
-CMP_SEEDS = (0, 1)
+CMP_SEEDS = (0, 1, 2)
 
 
 def run(full: bool = False) -> List[Dict]:
@@ -54,27 +53,37 @@ def _cmp_workload(cfg: PlatformConfig, full: bool):
 def artifact(rows: List[Dict], full: bool = False) -> Dict:
     """BENCH_makespan.json — sequential reference vs batched engine on the
     same policy × seed grid: wall-clock speedup, scheduling decisions/sec,
-    and exactness check.  (At CI scale the queue×pool products stay below
-    the auction threshold, so this tracks lockstep overhead ≈ 1×; the
+    and exactness check.  At CI scale the queue×pool products stay below
+    the auction threshold, so this tracks the grid driver itself: the
+    batched engine's rendezvous scheduling (full per-member locality, no
+    per-timestamp lockstep) vs one ``SimEngine`` run per member, with
+    both sides paying identical structural-sharing clones.  The CI gate
+    (benchmarks.check_speedup) holds the speedup above its floor; the
     device win lives in the large-workflow regime and in
-    BENCH_sched_throughput.json.)"""
+    BENCH_sched_throughput.json."""
     cfg = PlatformConfig()
     wl = _cmp_workload(cfg, full)
     n_tasks = sum(w.n_tasks for w in wl)
 
-    # Both sides start from the same pre-built workload and pay one deep
-    # copy per member — the walls measure engine work only, symmetrically.
-    t0 = time.perf_counter()
-    ref = {}
-    for pol in CMP_POLICIES:
-        for seed in CMP_SEEDS:
-            res = SimEngine(cfg, pol, copy.deepcopy(wl), seed=seed).run()
-            ref[(pol.name, seed)] = res
-    t_ref = time.perf_counter() - t0
+    # Both sides start from the same pre-built workload and pay one
+    # structural-sharing clone per member (engines mutate budgets), so
+    # the walls measure engine work only, symmetrically.  Each side is
+    # timed three times and keeps its best wall — the ratio then tracks
+    # engine behavior, not shared-runner noise or first-call warmup.
+    t_ref = float("inf")
+    t_bat = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        ref = {}
+        for pol in CMP_POLICIES:
+            for seed in CMP_SEEDS:
+                res = SimEngine(cfg, pol, clone_workload(wl), seed=seed).run()
+                ref[(pol.name, seed)] = res
+        t_ref = min(t_ref, time.perf_counter() - t0)
 
-    t0 = time.perf_counter()
-    grid = simulate_batch(cfg, CMP_POLICIES, wl, seed=list(CMP_SEEDS))
-    t_bat = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        grid = simulate_batch(cfg, CMP_POLICIES, wl, seed=list(CMP_SEEDS))
+        t_bat = min(t_bat, time.perf_counter() - t0)
 
     exact = all(
         [w.finish_ms for w in ref[(e.policy, e.seed)].workflows]

@@ -1,0 +1,48 @@
+"""CI gate over BENCH_makespan.json: the batched engine must stay at or
+above the speedup floor vs the sequential reference, with parity intact.
+
+``python -m benchmarks.check_speedup [--floor F] [--path P]``
+
+Exit non-zero when the artifact is missing, the batched-vs-reference
+speedup regressed below the floor, or the bit-exactness check failed.
+The default floor (0.95) leaves headroom for shared-runner noise; local
+runs track ≥ 1.0 (see CHANGES.md for the recorded trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_PATH = "artifacts/bench/BENCH_makespan.json"
+DEFAULT_FLOOR = 0.95
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=DEFAULT_PATH)
+    ap.add_argument("--floor", type=float, default=DEFAULT_FLOOR)
+    args = ap.parse_args()
+
+    path = pathlib.Path(args.path)
+    if not path.exists():
+        sys.exit(f"missing benchmark artifact: {path}")
+    art = json.loads(path.read_text())
+    speedup = float(art.get("speedup_batched_vs_ref", 0.0))
+    bit_exact = bool(art.get("bit_exact", False))
+    print(
+        f"batched-vs-reference speedup {speedup:.3f} (floor {args.floor}), "
+        f"bit_exact={bit_exact}, grid_members={art.get('grid_members')}"
+    )
+    if not bit_exact:
+        sys.exit("FAIL: batched engine lost bit-exact parity with reference")
+    if speedup < args.floor:
+        sys.exit(
+            f"FAIL: speedup {speedup:.3f} regressed below floor {args.floor}"
+        )
+    print("benchmark gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,7 +38,7 @@ from .types import (
     WorkflowResult,
     degradation_tables,
 )
-from ..sim.cloud import VM, VM_BUSY, VM_IDLE, VM_PROVISIONING, DataKey, VMPool
+from ..sim.cloud import VM, VM_IDLE, VM_PROVISIONING, DataKey, VMPool
 
 ARRIVAL, FINISH, VM_READY, REAP = 0, 1, 2, 3
 
@@ -81,10 +81,18 @@ class SimState:
         workflows: Sequence[Workflow],
         seed: int = 0,
         trace: bool = False,
+        predistributed: Optional[Dict[int, float]] = None,
     ):
+        """``predistributed``: wid → spare budget for workflows whose
+        arrival-time budget distribution (Algorithm 1 / MSLBL) already ran
+        on these task objects.  The distribution is deterministic in
+        (cfg, workflow, budget) — policy- and seed-independent — so a grid
+        engine computes it once per (workload, budget_mode) and shares the
+        result across members instead of recomputing per member."""
         self.cfg = cfg
         self.policy = policy
         self.workflows = list(workflows)
+        self.predistributed = predistributed
         self.pool = VMPool(cfg)
         self.queue: List[Tuple[int, int, int]] = []  # (est_ms, wid, tid)
         self.events: List[Tuple[int, int, int, tuple]] = []
@@ -155,7 +163,9 @@ class SimState:
         st.unscheduled = set(range(wf.n_tasks))
         st.pending_parents = {t.tid: len(t.parents) for t in wf.tasks}
         self.wf_state[wid] = st
-        if self.policy.budget_mode == "mslbl":
+        if self.predistributed is not None and wid in self.predistributed:
+            st.spare = self.predistributed[wid]  # tasks already carry budgets
+        elif self.policy.budget_mode == "mslbl":
             distribute_budget_mslbl(self.cfg, wf, wf.budget)
         else:
             st.spare = budget_mod.distribute_budget(self.cfg, wf, wf.budget)
@@ -181,13 +191,9 @@ class SimState:
         # Cache this task's output locally (the resource-sharing policy).
         vm.cache_put(self.cfg, ("out", wid, tid), task.out_mb,
                      self.pool.data_index)
-        vm.status = VM_IDLE
-        vm.idle_since_ms = self.now
+        self.pool.mark_idle(vm, self.now)
         self.vm_bound.pop(vm.vmid, None)
-        if self.policy.idle_threshold_ms > 0:
-            self._push(
-                self.now + self.policy.idle_threshold_ms, REAP, (vm.vmid, self.now)
-            )
+        self._arm_reap(vm)
         # Actual cost (Eq. 5) and budget bookkeeping.
         actual = self._actual_cost_of(run)
         st.cost += actual
@@ -213,21 +219,27 @@ class SimState:
         if vm.status == VM_PROVISIONING:
             bound = self.vm_bound.get(vmid)
             if bound is not None:
-                vm.status = VM_BUSY
+                self.pool.mark_busy(vm)
                 self._start_pipeline(*bound, vm, triggered_provision=True)
             else:
-                vm.status = VM_IDLE
-                vm.idle_since_ms = self.now
-                if self.policy.idle_threshold_ms > 0:
-                    self._push(
-                        self.now + self.policy.idle_threshold_ms,
-                        REAP,
-                        (vmid, self.now),
-                    )
+                self.pool.mark_idle(vm, self.now)
+                self._arm_reap(vm)
 
-    def _handle_reap(self, vmid: int, idle_marker_ms: int) -> None:
+    def _arm_reap(self, vm: VM) -> None:
+        """Schedule the deferred reap for the idle period that just opened;
+        the payload pins the current idle epoch so any reuse invalidates
+        the event."""
+        if self.policy.idle_threshold_ms > 0:
+            self._push(self.now + self.policy.idle_threshold_ms, REAP,
+                       (vm.vmid, vm.idle_epoch))
+
+    def _handle_reap(self, vmid: int, idle_epoch: int) -> None:
+        """A deferred reap kills its VM only if the idle epoch it was armed
+        for is still the current one — any reuse in between (even a
+        zero-length pipeline that returns to idle within the same
+        millisecond) bumps the epoch and invalidates the reap."""
         vm = self.pool.vms[vmid]
-        if vm.status == VM_IDLE and vm.idle_since_ms == idle_marker_ms:
+        if vm.status == VM_IDLE and vm.idle_epoch == idle_epoch:
             self.pool.terminate(vm, self.now)
 
     def reap_now(self) -> None:
@@ -265,7 +277,7 @@ class SimState:
             st.unscheduled.discard(tid)
             if placement.vm is not None:
                 vm = placement.vm
-                vm.status = VM_BUSY
+                self.pool.mark_busy(vm)
                 idle = [v for v in idle if v.vmid != vm.vmid]
                 self.vm_bound[vm.vmid] = (wid, tid)
                 self._start_pipeline(wid, tid, vm, triggered_provision=False)
@@ -320,7 +332,7 @@ class SimState:
             st.unscheduled.discard(tid)
             if p.vm is not None:
                 vm = p.vm
-                vm.status = VM_BUSY
+                self.pool.mark_busy(vm)
                 remaining.discard(vm.vmid)
                 self.vm_bound[vm.vmid] = (wid, tid)
                 self._start_pipeline(wid, tid, vm, triggered_provision=False)
@@ -342,8 +354,8 @@ class SimState:
         wf = st.wf
         task = wf.tasks[tid]
         gid = self._gid(wid, tid)
-        # 1. container (actual, mutates image cache)
-        c_ms = vm.activate_container(self.cfg, wf.app, self.policy.use_containers)
+        # 1. container (actual, mutates image cache + the pool's app indexes)
+        c_ms = self.pool.activate_container(vm, wf.app, self.policy.use_containers)
         # 2. input staging: only cache-missing bytes travel.
         inputs = self._inputs_of(wf, task)
         missing = vm.missing_mb(inputs)
@@ -435,7 +447,7 @@ class SimEngine(SimState):
         if self.queue and self._use_batched(len(self.queue), len(idle)):
             self._schedule_cycle_batched(idle)
             return
-        self.sequential_cycle()
+        self.sequential_cycle(idle)
 
     def _schedule_cycle_batched(self, idle: List[VM]) -> None:
         """Whole-queue scheduling via the JAX affinity kernel + auction
@@ -445,7 +457,7 @@ class SimEngine(SimState):
 
         tasks, metas = self.drain_queue_for_cycle()
         placements = batched_cycle(self.cfg, self.policy, tasks, idle,
-                                   self.pool.data_index)
+                                   self.pool)
         self.apply_cycle_placements(metas, placements, idle)
 
 

@@ -13,6 +13,15 @@ Tier encoding per (task, VM): 0 = out of scope (busy/wrong owner),
 1 = all inputs cached, 2 = container active, 3 = idle.  Provisioning
 (tier 4/5) can't conflict and stays in the per-task fallback.
 
+Pair arrays are built from the :class:`~repro.sim.cloud.VMPool`
+live-state registry, not from per-VM Python calls: VM-type attributes
+are vmid-indexed gathers, container-delay vectors come from the pool's
+incremental ``app_image`` / ``app_active`` sets, and sharing-scope masks
+from ``tag_members`` — each computed once per distinct app/tag per
+cycle.  Auction rounds write into resident padded ``[B, T, V]`` buffers
+(:class:`_RoundBuffers`) instead of re-allocating pad+stack copies, so
+the vmapped kernel call pays no per-round host rebuild cost.
+
 Two drivers consume the auction:
 
 * :func:`batched_cycle` — one simulation's cycle (used by ``SimEngine``
@@ -24,12 +33,13 @@ Two drivers consume the auction:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+import threading
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..kernels.affinity import ops as aff_ops
-from ..sim.cloud import VM, VM_IDLE, DataKey
+from ..sim.cloud import VM, VMPool
 from .scheduler import Placement, Policy
 from .types import PlatformConfig, Task
 
@@ -37,8 +47,9 @@ from .types import PlatformConfig, Task
 def build_pair_arrays(cfg: PlatformConfig, policy: Policy,
                       tasks: Sequence[Tuple[Task, str, object, List]],
                       vms: Sequence[VM],
-                      data_index: Dict[DataKey, set]):
-    """tasks: [(task, app, owner_tag, inputs)] in queue order."""
+                      pool: VMPool):
+    """tasks: [(task, app, owner_tag, inputs)] in queue order; ``vms`` are
+    idle VMs in ascending-vmid order (the auction's column space)."""
     T, V = len(tasks), len(vms)
     size = np.empty(T, np.float32)
     out_mb = np.empty(T, np.float32)
@@ -47,26 +58,49 @@ def build_pair_arrays(cfg: PlatformConfig, policy: Policy,
     cont = np.zeros((T, V), np.float32)
     tier = np.zeros((T, V), np.int32)
 
-    vm_ids = {vm.vmid: j for j, vm in enumerate(vms)}
-    mips = np.array([vm.vmt.mips for vm in vms], np.float32)
-    bw = np.array([vm.vmt.bandwidth_mbps for vm in vms], np.float32)
-    price = np.array([vm.vmt.cost_per_bp for vm in vms], np.float32)
+    ids = np.fromiter((vm.vmid for vm in vms), np.int64, V)
+    vm_ids = {vmid: j for j, vmid in enumerate(ids.tolist())}
+    # vmid-indexed gathers from the pool's static per-VM attribute arrays.
+    mips = pool.mips[ids]
+    bw = pool.bandwidth[ids]
+    price = pool.price[ids]
 
-    # Per-(vm, app) container state, computed once per distinct app.
-    apps = sorted({app for _, app, _, _ in tasks})
+    # Per-(vm, app) container state from the pool's incremental app
+    # indexes — O(|holders|) per distinct app, no per-VM Python calls.
     cont_by_app = {}
-    for app in apps:
-        cvec = np.array([vm.container_ms(cfg, app, policy.use_containers)
-                         for vm in vms], np.float32)
-        is_active = np.array([vm.active_container == app for vm in vms],
-                             dtype=bool)
+    for app in {app for _, app, _, _ in tasks}:
+        is_active = np.zeros(V, bool)
+        if not policy.use_containers:
+            cvec = np.zeros(V, np.float32)
+        else:
+            cvec = np.full(V, cfg.container_provision_ms, np.float32)
+            for vid in pool.app_image.get(app, ()):
+                j = vm_ids.get(vid)
+                if j is not None:
+                    cvec[j] = cfg.container_init_ms
+            for vid in pool.app_active.get(app, ()):
+                j = vm_ids.get(vid)
+                if j is not None:
+                    cvec[j] = 0.0
+                    is_active[j] = True
         cont_by_app[app] = (cvec, is_active)
 
+    # Sharing-scope masks, one per distinct owner tag this cycle.
+    scope_by_tag = {}
+    for tag in {tag for _, _, tag, _ in tasks}:
+        s = np.zeros(V, bool)
+        for vid in pool.tag_members.get(tag, ()):
+            j = vm_ids.get(vid)
+            if j is not None:
+                s[j] = True
+        scope_by_tag[tag] = s
+
+    data_index = pool.data_index
     for i, (task, app, tag, inputs) in enumerate(tasks):
         size[i] = task.size_mi
         out_mb[i] = task.out_mb
         budget[i] = task.budget
-        scope = np.array([vm.owner_tag == tag for vm in vms], dtype=bool)
+        scope = scope_by_tag[tag]
         cvec, is_active = cont_by_app[app]
         cont[i] = cvec
         if policy.locality_tiers:
@@ -99,6 +133,71 @@ def _p2(n: int) -> int:
     return 1 << max(n - 1, 1).bit_length()
 
 
+class _RoundBuffers:
+    """Resident padded pair buffers for auction rounds.
+
+    One ``(Bp, Tp, Vp)`` bucket's arrays stay allocated across rounds,
+    cycles and simulations; a round resets them (cheap memsets to the
+    inert padding values) and each active member writes its rows in
+    place.  This replaces the per-round pad-and-stack allocation storm
+    the vmapped kernel call used to pay.
+
+    The cache is thread-local (each thread driving engines gets its own
+    buffers — rounds from concurrent runs never interleave on shared
+    arrays) and only buckets up to ``MAX_RESIDENT_ELEMS`` pair elements
+    stay resident; paper-scale outliers allocate fresh per round rather
+    than pinning hundreds of MB at module scope.
+    """
+
+    __slots__ = ("key", "bufs")
+
+    # Largest B·T·V bucket kept alive between rounds (~4M pair elements
+    # ⇒ ≲50 MB across the six [B,T,V] arrays).
+    MAX_RESIDENT_ELEMS = 1 << 22
+
+    def __init__(self):
+        self.key = None
+        self.bufs = None
+
+    def get(self, Bp: int, Tp: int, Vp: int):
+        if self.key == (Bp, Tp, Vp):
+            size, out_mb, budget, missing, cont, tier, mips, bw, price = \
+                self.bufs
+            size.fill(0.0)
+            out_mb.fill(0.0)
+            budget.fill(-1.0)
+            missing.fill(0.0)
+            cont.fill(0.0)
+            tier.fill(0)
+            mips.fill(1.0)
+            bw.fill(1.0)
+            price.fill(1.0)
+            return self.bufs
+        bufs = (
+            np.zeros((Bp, Tp), np.float32),        # size
+            np.zeros((Bp, Tp), np.float32),        # out_mb
+            np.full((Bp, Tp), -1.0, np.float32),   # budget (inert: -1)
+            np.zeros((Bp, Tp, Vp), np.float32),    # missing
+            np.zeros((Bp, Tp, Vp), np.float32),    # cont
+            np.zeros((Bp, Tp, Vp), np.int32),      # tier (inert: 0)
+            np.ones((Bp, Vp), np.float32),         # mips (no div-by-zero)
+            np.ones((Bp, Vp), np.float32),         # bw
+            np.ones((Bp, Vp), np.float32),         # price
+        )
+        if Bp * Tp * Vp <= self.MAX_RESIDENT_ELEMS:
+            self.key, self.bufs = (Bp, Tp, Vp), bufs
+        # else: one-shot buffers — leave any cached smaller bucket intact.
+        return bufs
+
+
+class _ThreadLocalBuffers(threading.local):
+    def __init__(self):
+        self.rb = _RoundBuffers()
+
+
+_ROUND_BUFFERS = _ThreadLocalBuffers()
+
+
 class CycleRequest:
     """One simulation's auction state inside a (possibly multi-sim) cycle.
 
@@ -108,8 +207,7 @@ class CycleRequest:
     """
 
     def __init__(self, cfg: PlatformConfig, policy: Policy,
-                 tasks, vms: Sequence[VM],
-                 data_index: Dict[DataKey, set]):
+                 tasks, vms: Sequence[VM], pool: VMPool):
         self.vms = list(vms)
         T, V = len(tasks), len(vms)
         self.T, self.V = T, V
@@ -120,35 +218,28 @@ class CycleRequest:
         if T and V:
             (self.size, self.out_mb, self.budget, self.missing, self.cont,
              self.tier, self.mips, self.bw, self.price) = build_pair_arrays(
-                cfg, policy, tasks, vms, data_index)
+                cfg, policy, tasks, vms, pool)
 
     @property
     def active(self) -> bool:
         return bool(self.unplaced) and bool(self.avail.any()) \
             and not self.stalled
 
-    def propose(self, Tp: int, Vp: int):
-        """Pad this member's current unplaced rows into the shared
-        ``(Tp, Vp)`` bucket.  Padding is inert: tier 0, budget −1,
-        mips/bw/price 1 (no div-by-zero)."""
+    def propose_into(self, bufs, b: int) -> None:
+        """Write this member's current unplaced rows into batch row ``b``
+        of the shared resident buffers (already reset to inert padding)."""
+        size, out_mb, budget, missing, cont, tier, mips, bw, price = bufs
         sel = self.unplaced
         Tr, V = len(sel), self.V
-        pr = (0, Tp - Tr)
-        pc = (0, Vp - V)
-        avail_p = np.pad(self.avail, pc)
-        t_eff = np.pad(
-            np.pad(self.tier[sel], ((0, 0), pc))
-            * avail_p[None, :].astype(np.int32),
-            (pr, (0, 0)))
-        return (np.pad(self.size[sel], pr),
-                np.pad(self.out_mb[sel], pr),
-                np.pad(self.budget[sel], pr, constant_values=-1.0),
-                np.pad(self.missing[sel], (pr, pc)),
-                np.pad(self.cont[sel], (pr, pc)),
-                t_eff,
-                np.pad(self.mips, pc, constant_values=1.0),
-                np.pad(self.bw, pc, constant_values=1.0),
-                np.pad(self.price, pc, constant_values=1.0))
+        size[b, :Tr] = self.size[sel]
+        out_mb[b, :Tr] = self.out_mb[sel]
+        budget[b, :Tr] = self.budget[sel]
+        missing[b, :Tr, :V] = self.missing[sel]
+        cont[b, :Tr, :V] = self.cont[sel]
+        tier[b, :Tr, :V] = self.tier[sel] * self.avail[None, :]
+        mips[b, :V] = self.mips
+        bw[b, :V] = self.bw
+        price[b, :V] = self.price
 
     def commit(self, best, tiers, fins, costs_) -> None:
         """Serial-dictatorship prefix commit: the winner of each VM is its
@@ -193,9 +284,9 @@ def multi_cycle(cfg: PlatformConfig, requests: Sequence[CycleRequest],
 
     Members are independent simulations, so rounds interleave freely; a
     member drops out as soon as it has no unplaced task, no available VM,
-    or a round commits nothing.  The batch is padded to power-of-two
-    (B, T, V) buckets so the vmapped kernel recompiles per bucket, not
-    per round.
+    or a round commits nothing.  Rounds fill the resident power-of-two
+    ``(B, T, V)`` buffers (``_RoundBuffers``) so the vmapped kernel
+    recompiles per bucket, not per round, and allocates nothing per call.
     """
     while True:
         active = [r for r in requests if r.active]
@@ -203,20 +294,14 @@ def multi_cycle(cfg: PlatformConfig, requests: Sequence[CycleRequest],
             break
         Tp = max(_p2(len(r.unplaced)) for r in active)
         Vp = max(_p2(r.V) for r in active)
-        # Batch dim rounds to 1, 2, 4, … (a solo auction stays unpadded).
+        # Batch dim rounds to 1, 2, 4, … (a solo auction stays unpadded);
+        # rows beyond the active members keep the inert padding.
         Bp = 1 << max(len(active) - 1, 0).bit_length()
-        proposals = [r.propose(Tp, Vp) for r in active]
-        # Inert members pad the batch dim: tier-0 rows place nothing.
-        while len(proposals) < Bp:
-            proposals.append((
-                np.zeros(Tp, np.float32), np.zeros(Tp, np.float32),
-                np.full(Tp, -1.0, np.float32), np.zeros((Tp, Vp), np.float32),
-                np.zeros((Tp, Vp), np.float32), np.zeros((Tp, Vp), np.int32),
-                np.ones(Vp, np.float32), np.ones(Vp, np.float32),
-                np.ones(Vp, np.float32)))
-        stacked = [np.stack(cols) for cols in zip(*proposals)]
+        bufs = _ROUND_BUFFERS.rb.get(Bp, Tp, Vp)
+        for b, r in enumerate(active):
+            r.propose_into(bufs, b)
         res = aff_ops.affinity_batch(
-            *stacked,
+            *bufs,
             gs_read=cfg.gs_read_mbps, gs_write=cfg.gs_write_mbps,
             bp_ms=float(cfg.billing_period_ms), use_pallas=use_pallas)
         best = np.asarray(res.best_vm)
@@ -229,7 +314,7 @@ def multi_cycle(cfg: PlatformConfig, requests: Sequence[CycleRequest],
 
 
 def batched_cycle(cfg: PlatformConfig, policy: Policy,
-                  tasks, vms: Sequence[VM], data_index,
+                  tasks, vms: Sequence[VM], pool: VMPool,
                   use_pallas: bool = False
                   ) -> List[Optional[Placement]]:
     """Returns, per task (queue order), a reuse Placement or None (task
@@ -238,5 +323,5 @@ def batched_cycle(cfg: PlatformConfig, policy: Policy,
         return []
     if not vms:
         return [None] * len(tasks)
-    req = CycleRequest(cfg, policy, tasks, vms, data_index)
+    req = CycleRequest(cfg, policy, tasks, vms, pool)
     return multi_cycle(cfg, [req], use_pallas=use_pallas)[0]

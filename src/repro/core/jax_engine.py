@@ -10,45 +10,60 @@ Architecture
 Every grid member (policy × workload × seed) owns a :class:`SimState`
 (``core.engine``) — the single source of truth for arrival / finish /
 VM_READY / REAP handling, the execution pipeline, and Algorithm 3 budget
-redistribution.  :class:`BatchSimEngine` drives all members in lockstep
-*rounds*:
+redistribution.  :class:`BatchSimEngine` drives members as coroutines
+that **rendezvous at auction points**:
 
-1. each live member drains the events at its own next timestamp
-   (members have independent clocks — no cross-member interaction
-   exists, so rounds need no global time);
-2. members whose trigger fired contribute their scheduling cycle as a
-   ``CycleRequest`` (``core.jax_cycles``);
-3. all requests are auctioned together: each auction round stacks every
-   member's (task × VM) pair arrays into one ``[B, T, V]`` tensor and
-   scores it with a single ``jax.vmap``'d affinity kernel call
-   (``kernels.affinity.ops.affinity_batch``);
-4. placements commit through the shared ``apply_cycle_placements``.
+1. each member runs uninterrupted — full cache locality, zero
+   per-timestamp lockstep overhead — until its next scheduling cycle
+   that wants the auction (``CycleRequest``) or until it completes;
+2. every parked member's request is auctioned together: each auction
+   round stacks all pair arrays into one resident ``[B, T, V]`` buffer
+   and scores it with a single ``jax.vmap``'d affinity kernel call
+   (``kernels.affinity.ops.affinity_batch``, ``core.jax_cycles``);
+3. placements commit through the shared ``apply_cycle_placements`` and
+   each member resumes toward its next auction point.
+
+Members are independent simulations, so the interleaving is free to
+choose; rendezvous maximizes sharing (every batched kernel call carries
+*all* members with a pending auction, not just the ones whose event
+timestamps happened to coincide) while members that never auction —
+below-threshold cycles, MSLBL — run start-to-finish in one slice,
+exactly like the sequential reference.
 
 Because the transition semantics are shared code and the auction is the
 property-tested ``jax_cycles`` fixed point, results are bit-exact with
 the sequential reference (tests/test_jax_engine.py) in the paper's
 sufficient-budget regime.  MSLBL mutates spare budget mid-cycle, so
-MSLBL members run the per-task reference cycle inside the same lockstep
-loop (exactly as ``SimEngine`` itself does).
+MSLBL members run the per-task reference cycle inside their own slice
+(exactly as ``SimEngine`` itself does).
+
+Grid members simulate a structural-sharing clone of their workload
+(``Workflow.clone``): per-member ``Task`` objects for the mutable budget
+fields, shared immutable DAG lists — not a ``copy.deepcopy`` of the
+whole object graph.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 import time as _time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
+from . import budget as budget_mod
 from .engine import SimState
 from .jax_cycles import CycleRequest, multi_cycle
+from .mslbl import distribute_budget_mslbl
 from .scheduler import Policy
-from .types import PlatformConfig, SimResult, Workflow
+from .types import PlatformConfig, SimResult, Workflow, clone_workload
 
 # One grid member: (policy, workflows, degradation seed).
 GridMember = Tuple[Policy, Sequence[Workflow], int]
 
+# What a member yields when it parks at an auction point.
+_AuctionPoint = Tuple[SimState, list, list, CycleRequest]
+
 
 class BatchSimEngine:
-    """N independent simulations, lockstep rounds, batched cycle scoring."""
+    """N independent simulations, rendezvous rounds, batched cycle scoring."""
 
     def __init__(
         self,
@@ -57,18 +72,25 @@ class BatchSimEngine:
         trace: bool = False,
         use_pallas: bool = False,
         batched: object = "auto",
+        predistributed: Optional[Sequence[Optional[Dict[int, float]]]] = None,
     ):
         """``batched``: True / False / "auto" — same rule as ``SimEngine``:
         "auto" routes a member's cycle through the auction only when its
         queue×pool product is large (so tiny cycles keep the cheap
         per-task path and the member's decisions match ``SimEngine``'s
-        default configuration path-for-path)."""
+        default configuration path-for-path).
+
+        ``predistributed``: optional per-member wid → spare maps for
+        workloads whose arrival-time budget distribution already ran (see
+        ``predistribute_workload`` / ``SimState``)."""
         self.cfg = cfg
         self.use_pallas = use_pallas
         self.batched = batched
+        pre = predistributed or [None] * len(members)
         self.states = [
-            SimState(cfg, policy, workflows, seed=seed, trace=trace)
-            for policy, workflows, seed in members
+            SimState(cfg, policy, workflows, seed=seed, trace=trace,
+                     predistributed=p)
+            for (policy, workflows, seed), p in zip(members, pre)
         ]
         self.rounds = 0
         self.batched_calls = 0
@@ -85,38 +107,50 @@ class BatchSimEngine:
             return len(st.queue) * n_idle >= 8192
         return False
 
+    def _member_steps(self, st: SimState) -> Iterator[_AuctionPoint]:
+        """Run one member until its next auction point (yield) or until it
+        completes.  The driver commits the auction's placements before
+        resuming, so from the member's view the decision stream is
+        identical to ``SimEngine``'s."""
+        while not st.done:
+            if not st.advance():
+                continue
+            idle = st.pool.idle_vms()
+            if self._wants_auction(st, len(idle)):
+                tasks, metas = st.drain_queue_for_cycle()
+                yield st, metas, idle, CycleRequest(
+                    self.cfg, st.policy, tasks, idle, st.pool)
+            else:
+                st.sequential_cycle(idle)
+                st.post_cycle()
+
     def run(self) -> List[SimResult]:
         t0 = _time.time()
         for st in self.states:
             st.seed_arrivals()
-        while True:
-            live = [st for st in self.states if not st.done]
-            if not live:
-                break
+        live = [self._member_steps(st) for st in self.states]
+        while live:
             self.rounds += 1
             owners: List[Tuple[SimState, list, list]] = []
             requests: List[CycleRequest] = []
-            for st in live:
-                if not st.advance():
-                    continue
-                idle = st.pool.idle_vms()
-                if self._wants_auction(st, len(idle)):
-                    tasks, metas = st.drain_queue_for_cycle()
-                    requests.append(CycleRequest(
-                        self.cfg, st.policy, tasks, idle,
-                        st.pool.data_index))
-                    owners.append((st, metas, idle))
-                else:
-                    st.sequential_cycle(idle)
-                    st.post_cycle()
-            if requests:
-                self.batched_calls += 1
-                all_placements = multi_cycle(self.cfg, requests,
-                                             use_pallas=self.use_pallas)
-                for (st, metas, idle), placements in zip(owners,
-                                                         all_placements):
-                    st.apply_cycle_placements(metas, placements, idle)
-                    st.post_cycle()
+            parked: List[Iterator[_AuctionPoint]] = []
+            for stepper in live:
+                point = next(stepper, None)
+                if point is None:
+                    continue  # member ran to completion
+                st, metas, idle, req = point
+                owners.append((st, metas, idle))
+                requests.append(req)
+                parked.append(stepper)
+            if not requests:
+                break
+            self.batched_calls += 1
+            all_placements = multi_cycle(self.cfg, requests,
+                                         use_pallas=self.use_pallas)
+            for (st, metas, idle), placements in zip(owners, all_placements):
+                st.apply_cycle_placements(metas, placements, idle)
+                st.post_cycle()
+            live = parked
         self.wall_s = _time.time() - t0
         # Per-member wall is the amortized share of the grid run (they sum
         # to the total); the whole-grid wall lives on the engine/BatchResult.
@@ -155,6 +189,29 @@ class BatchResult:
         return out
 
 
+def predistribute_workload(
+    cfg: PlatformConfig, wl: Sequence[Workflow], budget_mode: str
+) -> Tuple[List[Workflow], Dict[int, float]]:
+    """Run the arrival-time budget distribution once on a prototype clone.
+
+    Algorithm 1 (and the MSLBL distribution) is deterministic in
+    (cfg, workflow, budget) — independent of policy and degradation seed
+    — so every grid member with the same workload and budget mode gets
+    identical sub-budgets.  Returns the distributed prototype (clone it
+    per member) and the wid → spare map to seed each member's
+    ``SimState`` with.
+    """
+    proto = clone_workload(wl)
+    spares: Dict[int, float] = {}
+    for wf in proto:
+        if budget_mode == "mslbl":
+            distribute_budget_mslbl(cfg, wf, wf.budget)
+            spares[wf.wid] = 0.0
+        else:
+            spares[wf.wid] = budget_mod.distribute_budget(cfg, wf, wf.budget)
+    return proto, spares
+
+
 def _as_workload_list(
     workloads: Union[Sequence[Workflow], Sequence[Sequence[Workflow]]],
 ) -> List[List[Workflow]]:
@@ -181,21 +238,30 @@ def simulate_batch(
     ``policy`` / ``seed`` accept a single value or a sequence;
     ``workloads`` accepts one workload (a sequence of ``Workflow``) or a
     sequence of workloads.  Budget distribution mutates tasks, so every
-    member simulates a deep copy — callers can reuse the same workload
-    objects across the grid.
+    member simulates a structural-sharing clone (``Workflow.clone``) —
+    callers can reuse the same workload objects across the grid.
     """
     policies = [policy] if isinstance(policy, Policy) else list(policy)
     seeds = [seed] if isinstance(seed, int) else list(seed)
     wls = _as_workload_list(workloads)
     members: List[GridMember] = []
     labels: List[Tuple[str, int, int]] = []
+    pre: List[Dict[int, float]] = []
+    # Arrival-time budget distribution is shared: computed once per
+    # (workload, budget_mode), inherited by every member's clone.
+    protos: Dict[Tuple[int, str], Tuple[List[Workflow], Dict[int, float]]] = {}
     for pol in policies:
         for wi, wl in enumerate(wls):
+            key = (wi, pol.budget_mode)
+            if key not in protos:
+                protos[key] = predistribute_workload(cfg, wl, pol.budget_mode)
+            proto, spares = protos[key]
             for s in seeds:
-                members.append((pol, copy.deepcopy(wl), s))
+                members.append((pol, clone_workload(proto), s))
                 labels.append((pol.name, wi, s))
+                pre.append(spares)
     engine = BatchSimEngine(cfg, members, trace=trace, use_pallas=use_pallas,
-                            batched=batched)
+                            batched=batched, predistributed=pre)
     results = engine.run()
     entries = [
         GridEntry(policy=name, workload=wi, seed=s, result=res)

@@ -9,7 +9,6 @@ data-sharing claim restated for ML), and a straggler-recovery comparison.
 from __future__ import annotations
 
 import collections
-import copy
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -17,9 +16,10 @@ import numpy as np
 
 from ..core import budget as budget_mod
 from ..core.engine import SimEngine
-from ..core.jax_engine import BatchSimEngine, GridMember
+from ..core.jax_engine import (BatchSimEngine, GridMember,
+                               predistribute_workload)
 from ..core.scheduler import ALL_POLICIES, EBPSM, MSLBL_MW, Policy
-from ..core.types import PlatformConfig, SimResult, Workflow
+from ..core.types import PlatformConfig, SimResult, Workflow, clone_workload
 from . import mljobs, slices
 
 
@@ -94,20 +94,30 @@ def sweep(n_jobs: int = 24, rates: Sequence[float] = (1.0, 4.0),
     batched engine run (core.jax_engine).
 
     Each (rate, seed) pair generates one workload; every policy simulates
-    a deep copy of it, so the comparison is paired exactly as in the
-    paper.  Returns one summary row per grid cell.
+    a structural-sharing clone of it (fresh budget fields, shared DAG
+    lists), so the comparison is paired exactly as in the paper.
+    Returns one summary row per grid cell.
     """
     cfg = cfg or slices.platform_config()
     members: List[GridMember] = []
     labels: List[Tuple[str, float, int]] = []
+    pre: List[Dict[int, float]] = []
     for rate in rates:
         for s in seeds:
             wfs = mljobs.ml_workload(n_jobs, rate, seed=s, art_dir=art_dir)
             assign_budgets(cfg, wfs, seed=s)
+            # One arrival-time budget distribution per budget mode; every
+            # policy member clones the distributed prototype.
+            protos = {}
             for pol in policies:
-                members.append((pol, copy.deepcopy(wfs), s))
+                if pol.budget_mode not in protos:
+                    protos[pol.budget_mode] = predistribute_workload(
+                        cfg, wfs, pol.budget_mode)
+                proto, spares = protos[pol.budget_mode]
+                members.append((pol, clone_workload(proto), s))
                 labels.append((pol.name, rate, s))
-    results = BatchSimEngine(cfg, members).run()
+                pre.append(spares)
+    results = BatchSimEngine(cfg, members, predistributed=pre).run()
     rows: List[Dict] = []
     for (name, rate, s), res in zip(labels, results):
         mks = np.array([w.makespan_ms for w in res.workflows]) / 1000.0

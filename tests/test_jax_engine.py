@@ -112,6 +112,38 @@ def test_mslbl_member_in_mixed_grid():
         assert_same(ref, e.result)
 
 
+def test_stress_scale_parity_live_registry():
+    """Stress-scale parity through the live-VM registry: a larger grid
+    with deferred reaping (idle_threshold_ms > 0, including a shortened
+    1 s threshold for extra reap/reuse churn) stays bit-exact between
+    both engines, and every member's pool ends with clean registry
+    invariants (terminated VMs pruned from every index)."""
+    import dataclasses
+
+    from repro.core.jax_engine import BatchSimEngine as _BSE
+
+    ebpsm_1s = dataclasses.replace(EBPSM, name="EBPSM_1S",
+                                   idle_threshold_ms=1_000)
+    pols = (EBPSM, ebpsm_1s)
+    wl_seeds = (9, 11)
+    members, keys = [], []
+    for pol in pols:
+        for ws in wl_seeds:
+            for s in (0, 3):
+                members.append((pol, workload(ws, n=14, rate=20.0), s))
+                keys.append((pol, ws, s))
+    eng = _BSE(CFG, members, batched=True)
+    results = eng.run()
+    for (pol, ws, s), res in zip(keys, results):
+        ref = SimEngine(CFG, pol, workload(ws, n=14, rate=20.0),
+                        seed=s).run()
+        assert_same(ref, res)
+    for st in eng.states:
+        st.pool.check_invariants()
+        assert st.pool.n_live == 0
+        assert st.pool.data_index == {}, "index not pruned after finalize"
+
+
 def test_all_tasks_complete_batch():
     grid = simulate_batch(CFG, ALL_POLICIES, workload(6, n=6), seed=0)
     for e in grid.entries:

@@ -1,0 +1,223 @@
+"""VM-lifecycle correctness: idle-epoch reaping, image-eviction accounting,
+data-index pruning, and the VMPool live-state registry invariants.
+
+Regression tests for the three lifecycle bugs fixed alongside the
+registry: (1) a deferred REAP armed before a reuse could kill the VM when
+the reuse started and ended within the same millisecond (the old
+``idle_since_ms`` timestamp marker cannot tell the two idle periods
+apart); (2) FIFO image eviction could leave ``active_container``
+pointing at an image no longer cached, making later ``container_ms``
+calls report 0 for an image that must be re-provisioned; (3)
+``VMPool.terminate`` discarded vmids from ``data_index`` holder sets but
+never pruned emptied sets, so the index grew monotonically over long
+multi-tenant runs.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.engine import SimEngine, SimState
+from repro.core.scheduler import EBPSM, EBPSM_NC
+from repro.core.types import PlatformConfig
+from repro.sim.cloud import VM, VM_IDLE, VM_TERMINATED, VMPool
+from repro.workflows.workload import WorkloadSpec, generate_workload
+
+CFG = PlatformConfig()
+
+
+def mk_vm(vmt_idx=0):
+    return VM(vmid=0, vmt_idx=vmt_idx, vmt=CFG.vm_types[vmt_idx])
+
+
+# ---------------------------------------------------------------------------
+# Bugfix 1 — stale REAP vs same-millisecond reuse
+# ---------------------------------------------------------------------------
+
+
+def test_stale_reap_spares_same_millisecond_reuse():
+    """A REAP belongs to the idle period it was armed for.  A reuse whose
+    zero-length pipeline (containers off, warm cache, 0-ms runtime)
+    returns the VM to idle within the same millisecond leaves
+    ``idle_since_ms`` unchanged — the old timestamp-marker check killed
+    the VM; the idle-epoch counter must not."""
+    st = SimState(CFG, EBPSM, [])
+    vm = st.pool.provision(0, now_ms=0)
+    st.now = 100
+    st.pool.mark_idle(vm, 100)              # idle period 1 opens
+    stale_epoch = vm.idle_epoch              # payload of period 1's REAP
+    st.pool.mark_busy(vm)                    # reused: zero-length pipeline…
+    st.pool.mark_idle(vm, 100)              # …idle again in the same ms
+    assert vm.idle_since_ms == 100           # the timestamp cannot tell
+    st.now = 100 + EBPSM.idle_threshold_ms
+    st._handle_reap(vm.vmid, stale_epoch)    # period 1's REAP fires
+    assert vm.status == VM_IDLE, \
+        "stale REAP killed a VM that was reused after it was armed"
+
+
+def test_current_epoch_reap_still_terminates():
+    """The fix must not break legitimate reaping: the reap armed for the
+    *current* idle period terminates an untouched VM."""
+    st = SimState(CFG, EBPSM, [])
+    vm = st.pool.provision(0, now_ms=0)
+    st.now = 100
+    st.pool.mark_idle(vm, 100)
+    st.now = 100 + EBPSM.idle_threshold_ms
+    st._handle_reap(vm.vmid, vm.idle_epoch)
+    assert vm.status == VM_TERMINATED
+
+
+def test_finish_arms_reap_with_current_epoch():
+    """End-to-end: every REAP event the engine queues carries exactly the
+    idle epoch current at arming time (captured at the _push call, before
+    any later transition can bump it)."""
+    from repro.core.engine import REAP
+
+    spec = WorkloadSpec(n_workflows=3, arrival_rate_per_min=6.0, seed=0,
+                        sizes=("small",), budget_lo=0.5, budget_hi=1.0)
+    eng = SimEngine(CFG, EBPSM, generate_workload(CFG, spec), seed=0)
+    orig_push = eng._push
+    armed = []
+    def spy(t_ms, kind, payload):
+        if kind == REAP:
+            vmid, epoch = payload
+            armed.append(epoch == eng.pool.vms[vmid].idle_epoch)
+        orig_push(t_ms, kind, payload)
+    eng._push = spy
+    eng.run()
+    assert armed, "run armed no REAP events"
+    assert all(armed), "a REAP was armed with a non-current idle epoch"
+
+
+# ---------------------------------------------------------------------------
+# Bugfix 2 — image eviction vs active_container
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_invalidates_active_container():
+    """When FIFO eviction removes the image backing ``active_container``
+    (tight image_slots), the pointer must be invalidated — otherwise
+    ``container_ms`` reports 0 for an image that is no longer cached."""
+    cfg = CFG.with_(image_slots=0)
+    vm = mk_vm()
+    vm.activate_container(cfg, "llama", True)
+    assert "llama" not in vm.image_cache
+    assert vm.active_container != "llama", \
+        "active_container points at an evicted image"
+    assert vm.container_ms(cfg, "llama", True) == cfg.container_provision_ms
+
+
+def test_eviction_keeps_fifo_accounting():
+    """Normal-slots behavior is unchanged: the newly activated image
+    survives, the oldest is evicted, and the pointer follows the
+    activation."""
+    cfg = CFG.with_(image_slots=2)
+    vm = mk_vm()
+    vm.activate_container(cfg, "a", True)
+    vm.activate_container(cfg, "b", True)
+    vm.activate_container(cfg, "c", True)      # evicts "a"
+    assert list(vm.image_cache) == ["b", "c"]
+    assert vm.active_container == "c"
+    assert vm.container_ms(cfg, "a", True) == cfg.container_provision_ms
+    assert vm.container_ms(cfg, "b", True) == cfg.container_init_ms
+    assert vm.container_ms(cfg, "c", True) == 0
+
+
+def test_pool_activate_container_syncs_app_indexes():
+    """The pool wrapper mirrors activations and evictions into the
+    incremental app_image / app_active sets the batched cycle reads."""
+    cfg = CFG.with_(image_slots=1)
+    pool = VMPool(cfg)
+    vm = pool.provision(0, now_ms=0)
+    pool.activate_container(vm, "a", True)
+    assert pool.app_image == {"a": {vm.vmid}}
+    assert pool.app_active == {"a": {vm.vmid}}
+    pool.activate_container(vm, "b", True)     # evicts "a"
+    assert pool.app_image == {"b": {vm.vmid}}
+    assert pool.app_active == {"b": {vm.vmid}}
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Bugfix 3 — data_index pruning
+# ---------------------------------------------------------------------------
+
+
+def test_terminate_prunes_data_index():
+    """Terminating the last holder of a dataset removes the key outright;
+    the inverted index must not accumulate dead entries over long runs."""
+    pool = VMPool(CFG)
+    vm = pool.provision(0, now_ms=0)
+    pool.mark_idle(vm, 0)
+    vm.cache_put(CFG, ("out", 0, 0), 10.0, pool.data_index)
+    vm.cache_put(CFG, ("out", 0, 1), 10.0, pool.data_index)
+    assert len(pool.data_index) == 2
+    pool.terminate(vm, now_ms=1_000)
+    assert pool.data_index == {}, \
+        "terminate left empty holder sets in data_index"
+
+
+def test_eviction_prunes_data_index():
+    """FIFO capacity eviction of the last holder also prunes the key."""
+    pool = VMPool(CFG)
+    vm = pool.provision(0, now_ms=0)
+    cap = vm.vmt.storage_mb
+    vm.cache_put(CFG, ("out", 0, 0), cap * 0.6, pool.data_index)
+    vm.cache_put(CFG, ("out", 0, 1), cap * 0.6, pool.data_index)  # evicts 0
+    assert ("out", 0, 0) not in pool.data_index
+    assert pool.data_index == {("out", 0, 1): {vm.vmid}}
+    pool.check_invariants()
+
+
+def test_shared_holder_not_pruned_early():
+    """A key with surviving holders keeps its (pruned) holder set."""
+    pool = VMPool(CFG)
+    a = pool.provision(0, now_ms=0)
+    b = pool.provision(0, now_ms=0)
+    for vm in (a, b):
+        pool.mark_idle(vm, 0)
+        vm.cache_put(CFG, ("shared", "ckpt", 0), 5.0, pool.data_index)
+    pool.terminate(a, now_ms=1_000)
+    assert pool.data_index == {("shared", "ckpt", 0): {b.vmid}}
+    pool.terminate(b, now_ms=2_000)
+    assert pool.data_index == {}
+
+
+# ---------------------------------------------------------------------------
+# Live-state registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_tracks_transitions():
+    pool = VMPool(CFG)
+    a = pool.provision(0, now_ms=0)
+    b = pool.provision(1, now_ms=0)
+    assert pool.n_live == 2 and pool.n_idle == 0
+    pool.mark_idle(a, 10)
+    pool.mark_idle(b, 10)
+    assert [vm.vmid for vm in pool.idle_vms()] == [a.vmid, b.vmid]
+    pool.mark_busy(a)
+    assert [vm.vmid for vm in pool.idle_vms()] == [b.vmid]
+    pool.check_invariants()
+    pool.mark_idle(a, 20)
+    pool.terminate(b, 30)
+    assert [vm.vmid for vm in pool.idle_vms()] == [a.vmid]
+    assert pool.n_live == 1
+    pool.check_invariants()
+
+
+def test_registry_invariants_after_full_run():
+    """Registry bookkeeping survives a real multi-workflow run with
+    deferred reaping, and finalize drains everything (the pruned
+    data_index ends empty)."""
+    spec = WorkloadSpec(n_workflows=6, arrival_rate_per_min=6.0, seed=3,
+                        sizes=("small",), budget_lo=0.5, budget_hi=1.0)
+    for pol in (EBPSM, EBPSM_NC,
+                dataclasses.replace(EBPSM, name="EBPSM_1S",
+                                    idle_threshold_ms=1_000)):
+        eng = SimEngine(CFG, pol, generate_workload(CFG, spec), seed=0)
+        eng.run()
+        eng.pool.check_invariants()
+        assert eng.pool.n_live == 0
+        assert eng.pool.data_index == {}
+        assert eng.pool.app_image == {} and eng.pool.app_active == {}
+        assert eng.pool.tag_members == {}
