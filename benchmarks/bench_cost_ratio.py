@@ -28,3 +28,20 @@ def run(full: bool = False) -> List[Dict]:
         rows.append(row)
     write_csv("table3_cost_ratio", rows)
     return rows
+
+
+def artifact(rows: List[Dict]) -> Dict:
+    """BENCH_cost_ratio.json — Table 3 trajectory: how far above budget
+    the violated workflows land, per arrival rate (lower is better; the
+    paper's claim is that violations stay marginal)."""
+    worst_p90 = max(r["p90"] for r in rows)
+    violation_rate = sum(r["n_violations"] for r in rows) / max(
+        sum(r["n_workflows"] for r in rows), 1)
+    return {
+        "bench": "cost_ratio",
+        "policy": "EBPSM",
+        "rates": [r["rate_wf_per_min"] for r in rows],
+        "violation_rate": violation_rate,
+        "worst_p90_cost_budget_ratio": worst_p90,
+        "rows": rows,
+    }

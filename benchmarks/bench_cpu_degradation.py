@@ -29,3 +29,31 @@ def run(full: bool = False) -> List[Dict]:
             rows.append(row)
     write_csv("fig5_fig6_cpu_degradation", rows)
     return rows
+
+
+def artifact(rows: List[Dict]) -> Dict:
+    """BENCH_cpu_degradation.json — Figs. 5–6 trajectory: EBPSM's
+    budget-update loop must keep absorbing degradation better than
+    MSLBL_MW's static safety net (budget-met gap per degradation step)."""
+    by_deg: Dict[float, Dict[str, Dict]] = {}
+    for r in rows:
+        by_deg.setdefault(r["max_degradation"], {})[r["policy"]] = r
+    steps = []
+    for dmax, pols in sorted(by_deg.items()):
+        e, m = pols.get("EBPSM"), pols.get("MSLBL_MW")
+        steps.append({
+            "max_degradation": dmax,
+            "ebpsm_budget_met": e["budget_met"] if e else None,
+            "mslbl_budget_met": m["budget_met"] if m else None,
+            "ebpsm_mean_makespan_s": e["mean_makespan_s"] if e else None,
+            "mslbl_mean_makespan_s": m["mean_makespan_s"] if m else None,
+        })
+    gaps = [s["ebpsm_budget_met"] - s["mslbl_budget_met"]
+            for s in steps
+            if s["ebpsm_budget_met"] is not None
+            and s["mslbl_budget_met"] is not None]
+    return {
+        "bench": "cpu_degradation",
+        "steps": steps,
+        "min_budget_met_gap_ebpsm_minus_mslbl": min(gaps) if gaps else None,
+    }

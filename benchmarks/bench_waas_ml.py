@@ -15,15 +15,10 @@ def run(full: bool = False) -> List[Dict]:
     n = 120 if full else 40
     rows = []
     for rep in compare_policies(n_jobs=n, rate=2.0, seed=7):
-        rows.append({
-            "policy": rep.policy,
-            "mean_makespan_s": rep.mean_makespan_s,
-            "p95_makespan_s": rep.p95_makespan_s,
-            "budget_met": rep.budget_met,
-            "utilization": rep.utilization,
-            "warm_placement_rate": rep.locality_hit_rate,
-            "total_slices": rep.sim.total_vms,
-        })
+        d = rep.metrics.to_dict()
+        d.pop("tier_hist", None)  # nested dict: not a CSV scalar
+        d["total_slices"] = rep.sim.total_vms
+        rows.append(d)
     write_csv("waas_ml_platform", rows)
 
     st = straggler_experiment(n_jobs=max(n // 2, 15), rate=2.0, seed=7)

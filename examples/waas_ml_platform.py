@@ -13,9 +13,11 @@ from repro.waas.platform import compare_policies, straggler_experiment
 def main() -> None:
     print("== multi-tenant ML platform: policy comparison ==")
     for rep in compare_policies(n_jobs=40, rate=2.0, seed=7):
-        print(rep.row())
+        print(rep.row())  # repro.exp.metrics schema (see README glossary)
         print(f"    placement tiers (1=warm weights, 2=warm program, "
               f"3=any idle slice, 4=new slice): {rep.tier_hist}")
+        print(f"    slice mix: {rep.slice_mix}  "
+              f"cached-input bytes: {rep.metrics.data_cache_hit_rate:.1%}")
 
     print("\n== straggler sensitivity (slice perf degradation) ==")
     st = straggler_experiment(n_jobs=20, rate=2.0, seed=7,

@@ -7,12 +7,20 @@ The distribution assigns every task a sub-budget.  Pass 1 levels the DAG
 cheapest-VM cost to every task and then spends any leftover budget upgrading
 the *earliest* tasks in ``S`` to the fastest affordable VM type
 (Slowest-First Task-based Distribution).
+
+All per-(task, VM type) estimates are read from the precomputed
+:mod:`core.cost_tables` table (one ``[T, V]`` grid per workflow family,
+shared across clones and both engines) instead of per-call scalar cost
+evaluation — Algorithm 3's per-finish redistribution, the shared hot path
+of both engines, reduces to indexed table reads.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
-from . import costs
+import numpy as np
+
+from . import cost_tables, costs
 from .types import PlatformConfig, Task, VMType, Workflow
 
 
@@ -53,12 +61,19 @@ def estimated_eft(
     cfg: PlatformConfig, wf: Workflow, ref_vmt: VMType
 ) -> List[int]:
     """Eq. (8): EFT on a reference VM type (cheapest), in ms."""
+    try:
+        ref_idx = cfg.vm_types.index(ref_vmt)
+        pt_of = cost_tables.table_for(cfg, wf).proc_ms[:, ref_idx]
+    except ValueError:  # off-catalogue reference type: scalar fallback
+        pt_of = [
+            costs.processing_ms(cfg, ref_vmt, t, input_mb(wf, t))
+            for t in wf.tasks
+        ]
     eft = [0] * wf.n_tasks
     for tid in topological_order(wf):
         t = wf.tasks[tid]
-        pt = costs.processing_ms(cfg, ref_vmt, t, input_mb(wf, t))
         start = max((eft[p] for p in t.parents), default=0)
-        eft[tid] = start + pt
+        eft[tid] = start + int(pt_of[tid])
     return eft
 
 
@@ -97,6 +112,10 @@ def distribute_budget(
     ``task_ids`` restricts distribution to a subset (used by Algorithm 3 to
     redistribute over unscheduled tasks); order within the subset follows the
     original estimated execution order (``task.rank``).
+
+    Both passes read the workflow's :class:`~core.cost_tables.CostTable`:
+    pass 1 is a masked cumulative reduction over the cheapest-type column,
+    pass 2 sweeps the precomputed ``[U, V]`` tier-cost slice.
     """
     if task_ids is None:
         order = execution_order(cfg, wf)
@@ -105,16 +124,16 @@ def distribute_budget(
     if not order:
         return budget
 
-    cheapest = cfg.vm_types[0]
-    # Pass 1: cheapest-VM conservative cost, allocated while the pool lasts.
-    alloc: Dict[int, float] = {}
-    remaining = budget
-    for tid in order:
-        t = wf.tasks[tid]
-        want = costs.estimate_full_cost(cfg, cheapest, t, input_mb(wf, t))
-        give = min(want, max(remaining, 0.0))
-        alloc[tid] = give
-        remaining -= give
+    table = cost_tables.table_for(cfg, wf)
+    order_arr = np.asarray(order, np.int64)
+    # Pass 1: cheapest-VM conservative cost, allocated while the pool
+    # lasts — give_i = min(want_i, max(β − Σ_{<i} give, 0)), as a masked
+    # cumulative table reduction (cfg.vm_types[0] is the cheapest type,
+    # mirroring the reference estimator in execution_order).
+    want = table.est_full_cost[order_arr, 0]
+    cum = np.cumsum(want)
+    alloc = np.minimum(want, np.maximum(budget - (cum - want), 0.0))
+    remaining = max(budget - float(alloc.sum()), 0.0)
 
     # Pass 2 (SFTD): sweep the order earliest-first, upgrading each task's
     # allocation by ONE VM-type tier per visit ("upgrade ... for a faster VM
@@ -124,41 +143,33 @@ def distribute_budget(
     # fastest/cheapest bimodal mix (which would pollute the shared pool with
     # slow cache-carrier VMs).
     if remaining > 0:
-        by_speed = sorted(range(len(cfg.vm_types)), key=lambda i: cfg.vm_types[i].mips)
-        tier_cost: Dict[int, List[float]] = {}
-        tier_of: Dict[int, int] = {}
-        for tid in order:
-            t = wf.tasks[tid]
-            mb = input_mb(wf, t)
-            tier_cost[tid] = [
-                costs.estimate_full_cost(cfg, cfg.vm_types[i], t, mb)
-                for i in by_speed
-            ]
-            # Current tier: highest tier fully covered by the allocation.
-            tier_of[tid] = 0
-            for k in range(len(by_speed) - 1, -1, -1):
-                if alloc[tid] >= tier_cost[tid][k] - 1e-9:
-                    tier_of[tid] = k
-                    break
+        tier_cost = table.est_full_cost[order_arr[:, None],
+                                        table.by_speed[None, :]]
+        K = tier_cost.shape[1]
+        # Current tier: highest tier fully covered by the allocation.
+        covered = alloc[:, None] >= tier_cost - 1e-9
+        any_cov = covered.any(axis=1)
+        highest = K - 1 - np.argmax(covered[:, ::-1], axis=1)
+        tier_of = np.where(any_cov, highest, 0)
         changed = True
         while remaining > 1e-9 and changed:
             changed = False
-            for tid in order:
-                k = tier_of[tid]
-                if k + 1 >= len(by_speed):
+            for u in range(len(order)):
+                k = int(tier_of[u])
+                if k + 1 >= K:
                     continue
-                delta = tier_cost[tid][k + 1] - alloc[tid]
+                delta = float(tier_cost[u, k + 1]) - float(alloc[u])
                 if 0 < delta <= remaining + 1e-9:
-                    alloc[tid] = tier_cost[tid][k + 1]
-                    tier_of[tid] = k + 1
+                    alloc[u] = tier_cost[u, k + 1]
+                    tier_of[u] = k + 1
                     remaining -= delta
                     changed = True
                 elif delta <= 0:
-                    tier_of[tid] = k + 1
+                    tier_of[u] = k + 1
                     changed = True
 
-    for tid in order:
-        wf.tasks[tid].budget = alloc[tid]
+    for pos, tid in enumerate(order):
+        wf.tasks[tid].budget = float(alloc[pos])
     return max(remaining, 0.0)
 
 
@@ -197,21 +208,14 @@ def min_max_workflow_cost(cfg: PlatformConfig, wf: Workflow) -> tuple:
     Minimum: sequential execution of every task on the cheapest type.
     Maximum: every task on its own fastest-type VM (max parallel spend).
     """
+    table = cost_tables.table_for(cfg, wf)
     cheapest = cfg.vm_types[0]
-    fastest = max(cfg.vm_types, key=lambda v: v.mips)
-    lo = sum(
-        costs.task_cost(
-            cfg, cheapest, t, input_mb(wf, t),
-            include_vm_provision=False, container_ms=0,
-        )
-        for t in wf.tasks
-    )
+    fastest_idx = max(range(len(cfg.vm_types)),
+                      key=lambda i: cfg.vm_types[i].mips)
+    lo = float(table.cost_bare[:, 0].sum())
     # Sequential on one VM: charge provisioning + one container once.
     lo += costs.billed_cost(
         cfg, cheapest, cfg.vm_provision_delay_ms + cfg.container_provision_ms
     )
-    hi = sum(
-        costs.estimate_full_cost(cfg, fastest, t, input_mb(wf, t))
-        for t in wf.tasks
-    )
+    hi = float(table.est_full_cost[:, fastest_idx].sum())
     return lo, hi

@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from . import budget as budget_mod
-from . import costs
+from . import cost_tables, costs
 from .mslbl import distribute_budget_mslbl
 from .scheduler import Placement, Policy, select
 from .types import (
@@ -41,6 +41,11 @@ from .types import (
 from ..sim.cloud import VM, VM_IDLE, VM_PROVISIONING, DataKey, VMPool
 
 ARRIVAL, FINISH, VM_READY, REAP = 0, 1, 2, 3
+
+# Auction engagement threshold for a solo SimEngine cycle (queue × pool
+# pair count).  The grid engine amortizes device calls across members and
+# uses the lower core.jax_engine.AUCTION_MIN_PAIRS_GRID.
+AUCTION_MIN_PAIRS = 8192
 
 # Queue-order metadata for one cycle's drained tasks: (wid, tid, inputs).
 CycleMeta = Tuple[int, int, List[Tuple[DataKey, float]]]
@@ -103,6 +108,14 @@ class SimState:
         self.running: Dict[Tuple[int, int], _Running] = {}
         self.vm_bound: Dict[int, Tuple[int, int]] = {}  # vmid -> (wid, tid)
         self.trace_rows: List[tuple] = [] if trace else None
+        # Resource-sharing counters (actuals, accumulated at pipeline
+        # start): data-cache bytes served locally vs staged, and container
+        # activations by warmth (0 ms / init-only / full download).
+        self.data_mb_total = 0.0
+        self.data_mb_hit = 0.0
+        self.container_warm = 0
+        self.container_init = 0
+        self.container_cold = 0
         total_tasks = sum(w.n_tasks for w in self.workflows)
         # Global per-task degradation tables, indexed by task global id.
         self.cpu_deg, self.bw_in_deg, self.bw_out_deg = degradation_tables(
@@ -269,6 +282,7 @@ class SimState:
                 inputs,
                 budget_eff,
                 idle,
+                table=cost_tables.table_for(self.cfg, wf),
             )
             if self.policy.budget_mode == "mslbl":
                 # Spare consumed by how much the estimate exceeds the base.
@@ -328,7 +342,8 @@ class SimState:
                 pool = [vm for vm in idle if vm.vmid in remaining
                         and vm.status == VM_IDLE]
                 p = select(self.cfg, self.policy, task, wid, st.wf.app,
-                           inputs, task.budget, pool)
+                           inputs, task.budget, pool,
+                           table=cost_tables.table_for(self.cfg, st.wf))
             st.unscheduled.discard(tid)
             if p.vm is not None:
                 vm = p.vm
@@ -354,11 +369,24 @@ class SimState:
         wf = st.wf
         task = wf.tasks[tid]
         gid = self._gid(wid, tid)
-        # 1. container (actual, mutates image cache + the pool's app indexes)
+        # 1. container (actual, mutates image cache + the pool's app indexes).
+        # Classify warmth from the VM's pre-activation state (the ground
+        # truth), not from the returned delay — degenerate configs can make
+        # the init and full-provision delays coincide.
+        if self.policy.use_containers:
+            if vm.active_container == wf.app:
+                self.container_warm += 1
+            elif wf.app in vm.image_cache:
+                self.container_init += 1
+            else:
+                self.container_cold += 1
         c_ms = self.pool.activate_container(vm, wf.app, self.policy.use_containers)
         # 2. input staging: only cache-missing bytes travel.
         inputs = self._inputs_of(wf, task)
         missing = vm.missing_mb(inputs)
+        total_mb = sum(mb for _, mb in inputs)
+        self.data_mb_total += total_mb
+        self.data_mb_hit += total_mb - missing
         in_ms = costs.transfer_in_ms(self.cfg, vm.vmt, missing, self.bw_in_deg[gid])
         for key, mb in inputs:
             vm.cache_put(self.cfg, key, mb, self.pool.data_index)
@@ -400,6 +428,11 @@ class SimState:
             vm_count_by_type=self.pool.vm_count_by_type,
             total_events=self.n_events,
             wall_s=wall_s,
+            data_mb_total=self.data_mb_total,
+            data_mb_hit=self.data_mb_hit,
+            container_warm=self.container_warm,
+            container_init=self.container_init,
+            container_cold=self.container_cold,
         )
 
 
@@ -414,12 +447,14 @@ class SimEngine(SimState):
         seed: int = 0,
         trace: bool = False,
         batched: object = "auto",
+        predistributed: Optional[Dict[int, float]] = None,
     ):
         """``batched``: True / False / "auto" — use the JAX batched
         scheduling cycle (core.jax_cycles) when the queue×pool product is
         large.  EBPSM-family policies only; MSLBL mutates spare budget
         mid-cycle and stays sequential."""
-        super().__init__(cfg, policy, workflows, seed=seed, trace=trace)
+        super().__init__(cfg, policy, workflows, seed=seed, trace=trace,
+                         predistributed=predistributed)
         self.batched = batched
 
     # ---- main loop -----------------------------------------------------------
@@ -439,7 +474,7 @@ class SimEngine(SimState):
         if self.batched is True:
             return True
         if self.batched == "auto":
-            return n_queue * n_idle >= 8192
+            return n_queue * n_idle >= AUCTION_MIN_PAIRS
         return False
 
     def _schedule_cycle(self) -> None:

@@ -40,7 +40,7 @@ import numpy as np
 
 from ..kernels.affinity import ops as aff_ops
 from ..sim.cloud import VM, VMPool
-from .scheduler import Placement, Policy
+from .scheduler import Placement, Policy, select
 from .types import PlatformConfig, Task
 
 
@@ -208,9 +208,13 @@ class CycleRequest:
 
     def __init__(self, cfg: PlatformConfig, policy: Policy,
                  tasks, vms: Sequence[VM], pool: VMPool):
+        self.cfg = cfg
+        self.policy = policy
+        self.tasks = list(tasks)
         self.vms = list(vms)
         T, V = len(tasks), len(vms)
         self.T, self.V = T, V
+        self.col = {vm.vmid: j for j, vm in enumerate(self.vms)}
         self.placements: List[Optional[Placement]] = [None] * T
         self.unplaced: List[int] = list(range(T)) if V else []
         self.avail = np.ones(V, bool)
@@ -241,15 +245,30 @@ class CycleRequest:
         bw[b, :V] = self.bw
         price[b, :V] = self.price
 
+    def _resolve_infeasible(self, ti: int) -> Placement:
+        """Sequential tier-4/5 resolution for a task the kernel found no
+        in-budget VM for, evaluated against the auction's *current*
+        availability set — the same ``select`` call, at the same point in
+        the serial order, the sequential reference makes.  Insufficient-
+        budget cycles therefore produce the reference interleaving even
+        when the tier-5 rule reuses (and thereby consumes) an idle VM."""
+        task, app, tag, inputs = self.tasks[ti]
+        pool = [vm for j, vm in enumerate(self.vms) if self.avail[j]]
+        return select(self.cfg, self.policy, task, -1, app, inputs,
+                      task.budget, pool, owner_tag=tag)
+
     def commit(self, best, tiers, fins, costs_) -> None:
         """Serial-dictatorship prefix commit: the winner of each VM is its
         earliest claimant, and only winners EARLIER than the first loser
         commit this round.  A later round-1 winner could otherwise steal
         the VM an earlier loser takes next — exactly the interleaving
-        the sequential reference produces.  Tasks with no feasible VM
-        (best < 0) resolve immediately: their availability set is a
-        superset of the sequential one (only earlier tasks have
-        committed), so sequential would provision too."""
+        the sequential reference produces.
+
+        Tasks with no feasible VM (best < 0) resolve *in serial position*
+        through :meth:`_resolve_infeasible` — the insufficient-budget
+        tier-5 rule may take an idle VM, in which case every later task
+        this round is deferred (``halted``) and re-auctions against the
+        shrunken pool, exactly as the sequential reference would see it."""
         claims: dict = {}
         for row, ti in enumerate(self.unplaced):
             j = int(best[row])
@@ -260,11 +279,23 @@ class CycleRequest:
         first_loser = min(losers) if losers else None
         next_unplaced = []
         committed = False
+        halted = False
         for row, ti in enumerate(self.unplaced):
             j = int(best[row])
+            if halted or (first_loser is not None and ti > first_loser):
+                next_unplaced.append(ti)
+                continue
             if j < 0:
-                continue  # provisioning fallback (final)
-            if claims[j] == ti and (first_loser is None or ti < first_loser):
+                p = self._resolve_infeasible(ti)
+                self.placements[ti] = p
+                committed = True
+                if p.vm is not None:
+                    # Tier-5 reuse consumed a VM the kernel scored as
+                    # infeasible; later tasks must re-auction without it.
+                    self.avail[self.col[p.vm.vmid]] = False
+                    halted = True
+                continue
+            if claims[j] == ti:
                 self.placements[ti] = Placement(
                     self.vms[j], None, int(tiers[row]),
                     int(fins[row]), float(costs_[row]))

@@ -58,6 +58,13 @@ from .types import PlatformConfig, SimResult, Workflow, clone_workload
 # One grid member: (policy, workflows, degradation seed).
 GridMember = Tuple[Policy, Sequence[Workflow], int]
 
+# Auction engagement threshold (queue × pool pairs) for grid members.
+# Lower than the solo SimEngine's core.engine.AUCTION_MIN_PAIRS: a grid
+# round amortizes the device call across every parked member, and the
+# auction now replicates the insufficient-budget tier-5 interleaving
+# (core.jax_cycles), so mid-size cycles can ride affinity_batch safely.
+AUCTION_MIN_PAIRS_GRID = 2048
+
 # What a member yields when it parks at an auction point.
 _AuctionPoint = Tuple[SimState, list, list, CycleRequest]
 
@@ -74,11 +81,11 @@ class BatchSimEngine:
         batched: object = "auto",
         predistributed: Optional[Sequence[Optional[Dict[int, float]]]] = None,
     ):
-        """``batched``: True / False / "auto" — same rule as ``SimEngine``:
-        "auto" routes a member's cycle through the auction only when its
-        queue×pool product is large (so tiny cycles keep the cheap
-        per-task path and the member's decisions match ``SimEngine``'s
-        default configuration path-for-path).
+        """``batched``: True / False / "auto" — "auto" routes a member's
+        cycle through the auction only when its queue×pool product
+        reaches ``AUCTION_MIN_PAIRS_GRID`` (tiny cycles keep the cheap
+        per-task path; outcomes are bit-exact with ``SimEngine`` on
+        either path, including insufficient-budget tier-5 cycles).
 
         ``predistributed``: optional per-member wid → spare maps for
         workloads whose arrival-time budget distribution already ran (see
@@ -104,7 +111,7 @@ class BatchSimEngine:
         if self.batched is True:
             return True
         if self.batched == "auto":
-            return len(st.queue) * n_idle >= 8192
+            return len(st.queue) * n_idle >= AUCTION_MIN_PAIRS_GRID
         return False
 
     def _member_steps(self, st: SimState) -> Iterator[_AuctionPoint]:

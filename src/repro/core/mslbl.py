@@ -6,31 +6,33 @@ Budget distribution: compute the workflow *budget level*
 task ``c_min + b · (c_max − c_min)`` — a safety-net allocation between the
 cheapest and fastest execution cost.  Leftover sub-budget of a completed task
 rolls over to the next task scheduled (single spare pool per workflow).
+
+``c_min`` / ``c_max`` are the cheapest- and fastest-type columns of the
+workflow's precomputed :mod:`core.cost_tables` table — the same numeric
+backbone Algorithm 1/3 read, so the EBPSM-vs-MSLBL comparison stays
+apples-to-apples down to the bit.
 """
 from __future__ import annotations
 
-from typing import List
-
-from . import costs
-from .budget import execution_order, input_mb
+from . import cost_tables
+from .budget import execution_order
 from .types import PlatformConfig, Workflow
 
 
 def distribute_budget_mslbl(cfg: PlatformConfig, wf: Workflow, budget: float) -> None:
-    order = execution_order(cfg, wf)  # also assigns levels/ranks
-    cheapest = min(cfg.vm_types, key=lambda v: v.mips)
-    fastest = max(cfg.vm_types, key=lambda v: v.mips)
-    c_min: List[float] = []
-    c_max: List[float] = []
-    for t in wf.tasks:
-        mb = input_mb(wf, t)
-        c_min.append(costs.estimate_full_cost(cfg, cheapest, t, mb))
-        c_max.append(costs.estimate_full_cost(cfg, fastest, t, mb))
-    lo, hi = sum(c_min), sum(c_max)
+    execution_order(cfg, wf)  # also assigns levels/ranks
+    table = cost_tables.table_for(cfg, wf)
+    cheapest_idx = min(range(len(cfg.vm_types)),
+                       key=lambda i: cfg.vm_types[i].mips)
+    fastest_idx = max(range(len(cfg.vm_types)),
+                      key=lambda i: cfg.vm_types[i].mips)
+    c_min = table.est_full_cost[:, cheapest_idx]
+    c_max = table.est_full_cost[:, fastest_idx]
+    lo, hi = float(c_min.sum()), float(c_max.sum())
     if hi - lo < 1e-9:
         level = 1.0
     else:
         level = (budget - lo) / (hi - lo)
     level = min(max(level, 0.0), 1.0)
     for t in wf.tasks:
-        t.budget = c_min[t.tid] + level * (c_max[t.tid] - c_min[t.tid])
+        t.budget = float(c_min[t.tid] + level * (c_max[t.tid] - c_min[t.tid]))

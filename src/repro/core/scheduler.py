@@ -21,8 +21,14 @@ import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 from . import costs
+from .cost_tables import CostTable
 from .types import PlatformConfig, Task, VMType
 from ..sim.cloud import VM, VM_IDLE, DataKey
+
+# Sentinel: "derive the owner tag from (wid, app)" — callers that already
+# hold the tag (the auction path) pass it explicitly, since None is a
+# legitimate tag (global sharing scope).
+_AUTO_TAG = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,13 +74,16 @@ def _est_pipeline_ms(
     task: Task,
     missing_mb: float,
     container_ms: int,
+    rt_out_ms: Optional[int] = None,
 ) -> int:
-    """Scheduler's estimate: advertised capacity, known cache state."""
-    pt = (
-        costs.transfer_in_ms(cfg, vmt, missing_mb)
-        + costs.runtime_ms(vmt, task.size_mi)
-        + costs.transfer_out_ms(cfg, vmt, task.out_mb)
-    )
+    """Scheduler's estimate: advertised capacity, known cache state.
+
+    ``rt_out_ms`` short-circuits the static RT + write-back legs with the
+    precomputed cost-table entry (bit-identical to the scalar sum)."""
+    if rt_out_ms is None:
+        rt_out_ms = costs.runtime_ms(vmt, task.size_mi) \
+            + costs.transfer_out_ms(cfg, vmt, task.out_mb)
+    pt = costs.transfer_in_ms(cfg, vmt, missing_mb) + rt_out_ms
     return container_ms + pt
 
 
@@ -94,9 +103,11 @@ def _best_in(
     budget: float,
     vms: Sequence[VM],
     tier: int,
+    table: Optional[CostTable] = None,
 ) -> Optional[Placement]:
     """Min-(finish, vmid) feasible VM among ``vms`` (Alg. 2 inner choice)."""
     best: Optional[Placement] = None
+    rt_out = table.rt_out_ms[task.tid] if table is not None else None
     for vm in vms:
         c_ms = vm.container_ms(cfg, app, policy.use_containers)
         if policy.locality_tiers:
@@ -104,7 +115,9 @@ def _best_in(
         else:
             # MSLBL's estimate ignores cache contents (conservative).
             missing = sum(mb for _, mb in inputs)
-        pipe = _est_pipeline_ms(cfg, vm.vmt, task, missing, c_ms)
+        pipe = _est_pipeline_ms(
+            cfg, vm.vmt, task, missing, c_ms,
+            int(rt_out[vm.vmt_idx]) if rt_out is not None else None)
         cost = _est_cost(cfg, vm.vmt, pipe, include_prov=False)
         if cost > budget + 1e-9:
             continue
@@ -126,45 +139,63 @@ def select(
     inputs: List[Tuple[DataKey, float]],
     budget: float,
     idle_vms: Sequence[VM],
+    table: Optional[CostTable] = None,
+    owner_tag: object = _AUTO_TAG,
 ) -> Placement:
     """Algorithm 2 for one task.  Always returns a placement (the paper
     assumes budgets are sufficient; when even the cheapest new VM exceeds the
     sub-budget we still fall back to the cheapest type — the budget is a soft
-    constraint and Algorithm 3 will recover the debt downstream)."""
-    tag = policy.owner_tag(wid, app)
+    constraint and Algorithm 3 will recover the debt downstream).
+
+    ``table`` (the workflow's cost table) short-circuits the static
+    estimate legs; every table entry is bit-identical to the scalar
+    computation, so callers may mix table-carrying and bare calls freely.
+    """
+    tag = policy.owner_tag(wid, app) if owner_tag is _AUTO_TAG else owner_tag
     pool = [vm for vm in idle_vms if vm.status == VM_IDLE and vm.owner_tag == tag]
 
     if policy.locality_tiers and pool:
         tier1 = [vm for vm in pool if vm.has_all_inputs(inputs)]
-        p = _best_in(cfg, policy, task, app, inputs, budget, tier1, tier=1)
+        p = _best_in(cfg, policy, task, app, inputs, budget, tier1, tier=1,
+                     table=table)
         if p is not None:
             return p
         rest = [vm for vm in pool if vm not in tier1]
         if policy.use_containers:
             tier2 = [vm for vm in rest if vm.active_container == app]
-            p = _best_in(cfg, policy, task, app, inputs, budget, tier2, tier=2)
+            p = _best_in(cfg, policy, task, app, inputs, budget, tier2,
+                         tier=2, table=table)
             if p is not None:
                 return p
             rest = [vm for vm in rest if vm not in tier2]
-        p = _best_in(cfg, policy, task, app, inputs, budget, rest, tier=3)
+        p = _best_in(cfg, policy, task, app, inputs, budget, rest, tier=3,
+                     table=table)
         if p is not None:
             return p
     elif pool:
-        p = _best_in(cfg, policy, task, app, inputs, budget, pool, tier=3)
+        p = _best_in(cfg, policy, task, app, inputs, budget, pool, tier=3,
+                     table=table)
         if p is not None:
             return p
 
-    # Tier 4: provision the fastest affordable new VM.
+    # Tier 4: provision the fastest affordable new VM.  The full-input
+    # pipeline estimate is exactly the cost table's proc_ms row.
     total_in = sum(mb for _, mb in inputs)
     c_ms = cfg.container_provision_ms if policy.use_containers else 0
+    proc = table.proc_ms[task.tid] if table is not None else None
+
+    def full_pipe(idx: int) -> int:
+        if proc is not None:
+            return int(proc[idx]) + c_ms
+        return _est_pipeline_ms(cfg, cfg.vm_types[idx], task, total_in, c_ms)
+
     for idx in sorted(
         range(len(cfg.vm_types)),
         key=lambda i: cfg.vm_types[i].mips,
         reverse=True,
     ):
-        vmt = cfg.vm_types[idx]
-        pipe = _est_pipeline_ms(cfg, vmt, task, total_in, c_ms)
-        cost = _est_cost(cfg, vmt, pipe, include_prov=True)
+        pipe = full_pipe(idx)
+        cost = _est_cost(cfg, cfg.vm_types[idx], pipe, include_prov=True)
         if cost <= budget + 1e-9:
             return Placement(
                 None, idx, 4, cfg.vm_provision_delay_ms + pipe, cost
@@ -175,20 +206,22 @@ def select(
     # Take the *cheapest* feasible action: min-cost over reusing any idle VM
     # in scope vs. provisioning a fresh cheapest-type VM.
     cands: List[Placement] = []
+    rt_out = table.rt_out_ms[task.tid] if table is not None else None
     for vm in pool:
         cm = vm.container_ms(cfg, app, policy.use_containers)
         missing = vm.missing_mb(inputs) if policy.locality_tiers else total_in
-        pipe = _est_pipeline_ms(cfg, vm.vmt, task, missing, cm)
+        pipe = _est_pipeline_ms(
+            cfg, vm.vmt, task, missing, cm,
+            int(rt_out[vm.vmt_idx]) if rt_out is not None else None)
         cands.append(
             Placement(vm, None, 5, pipe, _est_cost(cfg, vm.vmt, pipe, False))
         )
     idx = min(range(len(cfg.vm_types)), key=lambda i: cfg.vm_types[i].cost_per_bp)
-    vmt = cfg.vm_types[idx]
-    pipe = _est_pipeline_ms(cfg, vmt, task, total_in, c_ms)
+    pipe = full_pipe(idx)
     cands.append(
         Placement(
             None, idx, 5, cfg.vm_provision_delay_ms + pipe,
-            _est_cost(cfg, vmt, pipe, include_prov=True),
+            _est_cost(cfg, cfg.vm_types[idx], pipe, include_prov=True),
         )
     )
     return min(

@@ -115,6 +115,10 @@ class Workflow:
     tasks: List[Task]
     budget: float = 0.0
     arrival_ms: int = 0
+    # Memoized core.cost_tables.CostTable — depends only on the immutable
+    # task attributes, so clones share it by reference (see table_for).
+    cost_cache: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def entry_tasks(self) -> List[int]:
         return [t.tid for t in self.tasks if not t.parents]
@@ -142,6 +146,7 @@ class Workflow:
             tasks=[dataclasses.replace(t) for t in self.tasks],
             budget=self.budget,
             arrival_ms=self.arrival_ms,
+            cost_cache=self.cost_cache,
         )
 
     def validate(self) -> None:
@@ -210,6 +215,14 @@ class SimResult:
     vm_count_by_type: Dict[str, int]
     total_events: int = 0
     wall_s: float = 0.0
+    # Resource-sharing actuals (the paper's policy claim made measurable):
+    # input bytes served from VM-local caches vs staged, and container
+    # activations by warmth.  Zeros for policies without containers.
+    data_mb_total: float = 0.0
+    data_mb_hit: float = 0.0
+    container_warm: int = 0
+    container_init: int = 0
+    container_cold: int = 0
 
     @property
     def avg_vm_utilization(self) -> float:
@@ -220,6 +233,20 @@ class SimResult:
     @property
     def total_vms(self) -> int:
         return sum(self.vm_count_by_type.values())
+
+    @property
+    def data_cache_hit_rate(self) -> float:
+        """Fraction of input bytes served from a VM-local cache."""
+        return self.data_mb_hit / self.data_mb_total \
+            if self.data_mb_total > 0 else 0.0
+
+    @property
+    def container_hit_rate(self) -> float:
+        """Fraction of container activations that skipped the image
+        download (active or image-cached)."""
+        acts = self.container_warm + self.container_init + self.container_cold
+        return (self.container_warm + self.container_init) / acts \
+            if acts > 0 else 0.0
 
     @property
     def budget_met_fraction(self) -> float:

@@ -1,0 +1,2 @@
+"""Paper-grid evaluation subsystem: scenario registry, metrics collection,
+and the reproduction harness (``python -m repro.exp.run --grid <name>``)."""

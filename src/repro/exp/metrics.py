@@ -1,0 +1,117 @@
+"""Per-cell metrics collection for the evaluation grid.
+
+One :class:`CellMetrics` summarizes one (scenario cell × policy)
+simulation: the paper's headline quantities (makespan, cost/budget ratio,
+budget-met %, VM usage) plus the resource-sharing actuals that make the
+policy comparison explainable (container/data-cache hit rates, placement
+tier histogram).  ``waas.platform`` and the ``repro.exp.run`` harness both
+consume this collector, so every report in the repo speaks one schema —
+see the metrics glossary in README.md.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.types import SimResult
+
+
+@dataclasses.dataclass
+class CellMetrics:
+    """Summary of one simulation run (one grid cell × policy)."""
+
+    policy: str
+    n_workflows: int
+    mean_makespan_s: float
+    p95_makespan_s: float
+    mean_cost_budget_ratio: float
+    budget_met: float             # fraction of workflows with cost ≤ budget
+    utilization: float            # busy-seconds / lease-seconds, all VMs
+    total_vms: int
+    vm_lease_s: float             # Σ leased VM-seconds (spend proxy)
+    data_cache_hit_rate: float    # input MB served locally / total input MB
+    container_hit_rate: float     # activations that skipped the download
+    # Placement-tier histogram (1=input-data locality, 2=warm container,
+    # 3=any idle, 4=new VM, 5=insufficient-budget fallback); empty when
+    # the run was not traced.
+    tier_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_result(
+        cls,
+        policy: str,
+        res: SimResult,
+        trace_rows: Optional[Sequence[tuple]] = None,
+    ) -> "CellMetrics":
+        mks = np.array([w.makespan_ms for w in res.workflows], np.float64)
+        ratios = np.array(
+            [w.cost_budget_ratio for w in res.workflows], np.float64
+        )
+        tiers = (
+            dict(sorted(collections.Counter(r[3] for r in trace_rows).items()))
+            if trace_rows else {}
+        )
+        return cls(
+            policy=policy,
+            n_workflows=len(res.workflows),
+            mean_makespan_s=float(mks.mean()) / 1000.0 if len(mks) else 0.0,
+            p95_makespan_s=float(np.percentile(mks, 95)) / 1000.0
+            if len(mks) else 0.0,
+            mean_cost_budget_ratio=float(ratios.mean()) if len(ratios) else 0.0,
+            budget_met=res.budget_met_fraction,
+            utilization=res.avg_vm_utilization,
+            total_vms=res.total_vms,
+            vm_lease_s=float(sum(res.vm_seconds_by_type.values())),
+            data_cache_hit_rate=res.data_cache_hit_rate,
+            container_hit_rate=res.container_hit_rate,
+            tier_hist=tiers,
+        )
+
+    @property
+    def locality_hit_rate(self) -> float:
+        """Fraction of placements on a VM already holding all inputs."""
+        total = sum(self.tier_hist.values())
+        return self.tier_hist.get(1, 0) / total if total else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["locality_hit_rate"] = self.locality_hit_rate
+        d["tier_hist"] = {str(k): v for k, v in self.tier_hist.items()}
+        return d
+
+
+def format_row(m: CellMetrics) -> str:
+    """One-line human-readable summary (examples / REPL use)."""
+    return (f"{m.policy:10s} mk={m.mean_makespan_s:9.1f}s "
+            f"p95={m.p95_makespan_s:9.1f}s met={m.budget_met:6.2%} "
+            f"util={m.utilization:6.2%} warm={m.locality_hit_rate:6.2%} "
+            f"data-hit={m.data_cache_hit_rate:6.2%} "
+            f"cont-hit={m.container_hit_rate:6.2%}")
+
+
+def aggregate_by_policy(cells: Sequence[CellMetrics]) -> Dict[str, Dict]:
+    """Across-cell aggregates per policy: mean of the cell means (every
+    cell weighs equally, matching the paper's per-configuration figures)
+    plus the worst cell for the floor-gated quantities."""
+    by_pol: Dict[str, List[CellMetrics]] = {}
+    for m in cells:
+        by_pol.setdefault(m.policy, []).append(m)
+    out: Dict[str, Dict] = {}
+    for pol, ms in sorted(by_pol.items()):
+        out[pol] = {
+            "cells": len(ms),
+            "mean_makespan_s": float(np.mean([m.mean_makespan_s for m in ms])),
+            "mean_cost_budget_ratio": float(
+                np.mean([m.mean_cost_budget_ratio for m in ms])),
+            "budget_met_mean": float(np.mean([m.budget_met for m in ms])),
+            "budget_met_min": float(np.min([m.budget_met for m in ms])),
+            "utilization_mean": float(np.mean([m.utilization for m in ms])),
+            "data_cache_hit_rate_mean": float(
+                np.mean([m.data_cache_hit_rate for m in ms])),
+            "container_hit_rate_mean": float(
+                np.mean([m.container_hit_rate for m in ms])),
+        }
+    return out

@@ -1,0 +1,238 @@
+"""Paper-grid reproduction harness.
+
+    PYTHONPATH=src python -m repro.exp.run --grid paper-smoke
+
+Runs a registered :mod:`repro.exp.scenarios` grid through the batched
+engine (``core.jax_engine.BatchSimEngine``) — every policy simulates a
+structural-sharing clone of the same per-cell workload, with the
+arrival-time budget distribution computed once per (workload, budget
+mode) — collects one :class:`repro.exp.metrics.CellMetrics` per
+(cell × policy), and emits:
+
+* ``<out>/BENCH_paper_grid.json`` — the machine-readable artifact CI
+  uploads and diff-tracks across PRs;
+* ``<out>/paper_grid.md`` — a human-readable report (summary table +
+  per-cell makespans).
+
+``--check-floors`` turns the run into a gate: non-zero exit when any
+EBPSM cell's budget-met % drops below the scenario's recorded floor, or
+when EBPSM stops beating MSLBL_MW on mean makespan (the paper's headline
+claim).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.jax_engine import (BatchSimEngine, GridMember,
+                               predistribute_workload)
+from ..core.types import PlatformConfig, clone_workload
+from ..workflows.workload import cell_workload
+from .metrics import CellMetrics, aggregate_by_policy
+from .scenarios import POLICY_BY_NAME, Scenario, WorkloadCell, get_scenario
+
+ARTIFACT_NAME = "BENCH_paper_grid.json"
+REPORT_NAME = "paper_grid.md"
+
+
+def _chunked(seq: Sequence, n: int):
+    for i in range(0, len(seq), n):
+        yield seq[i:i + n]
+
+
+def run_grid(
+    scenario: Scenario,
+    cfg: Optional[PlatformConfig] = None,
+    cells_per_batch: int = 8,
+    trace: bool = True,
+    verbose: bool = False,
+) -> Dict:
+    """Run the whole grid; returns the artifact payload."""
+    cfg = cfg or PlatformConfig()
+    policies = [POLICY_BY_NAME[name] for name in scenario.policies]
+    wcells = list(scenario.workload_cells())
+    t0 = time.perf_counter()
+    rows: List[Dict] = []
+    collected: List[CellMetrics] = []
+
+    for batch in _chunked(wcells, cells_per_batch):
+        members: List[GridMember] = []
+        labels: List[Tuple[WorkloadCell, str]] = []
+        pre: List[Dict[int, float]] = []
+        for cell in batch:
+            wl = cell_workload(cfg, cell.app, cell.rate, cell.budget_interval,
+                               cell.workload_seed, scenario.n_workflows,
+                               scenario.sizes)
+            protos = {}
+            for pol in policies:
+                if pol.budget_mode not in protos:
+                    protos[pol.budget_mode] = predistribute_workload(
+                        cfg, wl, pol.budget_mode)
+                proto, spares = protos[pol.budget_mode]
+                members.append((pol, clone_workload(proto), cell.seed))
+                labels.append((cell, pol.name))
+                pre.append(spares)
+        engine = BatchSimEngine(cfg, members, trace=trace, predistributed=pre)
+        results = engine.run()
+        for (cell, pol_name), res, st in zip(labels, results, engine.states):
+            m = CellMetrics.from_result(pol_name, res, st.trace_rows)
+            collected.append(m)
+            rows.append({
+                "app": cell.app,
+                "rate_wf_per_min": cell.rate,
+                "budget_lo": cell.budget_interval[0],
+                "budget_hi": cell.budget_interval[1],
+                "seed": cell.seed,
+                **m.to_dict(),
+            })
+        if verbose:
+            done = len(rows)
+            print(f"  {done}/{scenario.n_cells} cells "
+                  f"({time.perf_counter() - t0:.1f}s)")
+
+    summary = aggregate_by_policy(collected)
+    ebpsm = summary.get("EBPSM", {})
+    mslbl = summary.get("MSLBL_MW", {})
+    return {
+        "bench": "paper_grid",
+        "scenario": scenario.name,
+        "description": scenario.description,
+        "n_cells": scenario.n_cells,
+        "n_workflows_per_cell": scenario.n_workflows,
+        "ebpsm_budget_met_floor": scenario.ebpsm_budget_met_floor,
+        "wall_s": time.perf_counter() - t0,
+        "summary_by_policy": summary,
+        "ebpsm_vs_mslbl_makespan_ratio": (
+            ebpsm["mean_makespan_s"] / mslbl["mean_makespan_s"]
+            if ebpsm.get("mean_makespan_s") and mslbl.get("mean_makespan_s")
+            else None
+        ),
+        "cells": rows,
+    }
+
+
+def check_floors(art: Dict) -> List[str]:
+    """CI gate: EBPSM budget-met floor per cell + the headline makespan
+    win over MSLBL_MW (when both policies are in the grid)."""
+    failures: List[str] = []
+    floor = float(art.get("ebpsm_budget_met_floor", 0.0))
+    for row in art["cells"]:
+        if row["policy"] != "EBPSM":
+            continue
+        if row["budget_met"] < floor - 1e-9:
+            failures.append(
+                f"EBPSM budget-met {row['budget_met']:.2%} < floor "
+                f"{floor:.2%} in cell app={row['app']} "
+                f"rate={row['rate_wf_per_min']} "
+                f"budget=[{row['budget_lo']},{row['budget_hi']}] "
+                f"seed={row['seed']}"
+            )
+    ratio = art.get("ebpsm_vs_mslbl_makespan_ratio")
+    if ratio is not None and ratio >= 1.0:
+        failures.append(
+            f"EBPSM mean makespan no longer beats MSLBL_MW "
+            f"(ratio {ratio:.3f} >= 1)"
+        )
+    return failures
+
+
+def write_report(art: Dict, path: str) -> None:
+    lines = [
+        f"# Paper grid — `{art['scenario']}`",
+        "",
+        art["description"],
+        "",
+        f"{art['n_cells']} cells, {art['n_workflows_per_cell']} workflows "
+        f"per cell, wall {art['wall_s']:.1f}s.",
+        "",
+        "## Summary by policy",
+        "",
+        "| policy | mean makespan (s) | cost/budget | budget met "
+        "(mean / min) | util | data hit | container hit |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for pol, s in art["summary_by_policy"].items():
+        lines.append(
+            f"| {pol} | {s['mean_makespan_s']:.1f} "
+            f"| {s['mean_cost_budget_ratio']:.3f} "
+            f"| {s['budget_met_mean']:.1%} / {s['budget_met_min']:.1%} "
+            f"| {s['utilization_mean']:.1%} "
+            f"| {s['data_cache_hit_rate_mean']:.1%} "
+            f"| {s['container_hit_rate_mean']:.1%} |"
+        )
+    ratio = art.get("ebpsm_vs_mslbl_makespan_ratio")
+    if ratio is not None:
+        lines += ["", f"EBPSM / MSLBL_MW mean-makespan ratio: "
+                      f"**{ratio:.3f}** (< 1 means EBPSM wins)."]
+    lines += [
+        "",
+        "## Per-cell mean makespan (s)",
+        "",
+        "| app | rate | budget | seed | " + " | ".join(
+            p for p in sorted({r['policy'] for r in art['cells']})) + " |",
+        "|---|---|---|---|" + "---|" * len(
+            {r['policy'] for r in art['cells']}),
+    ]
+    by_cell: Dict[tuple, Dict[str, float]] = {}
+    for r in art["cells"]:
+        key = (r["app"], r["rate_wf_per_min"], r["budget_lo"],
+               r["budget_hi"], r["seed"])
+        by_cell.setdefault(key, {})[r["policy"]] = r["mean_makespan_s"]
+    pols = sorted({r["policy"] for r in art["cells"]})
+    for key, vals in sorted(by_cell.items()):
+        app, rate, blo, bhi, seed = key
+        cells = " | ".join(f"{vals.get(p, float('nan')):.1f}" for p in pols)
+        lines.append(f"| {app} | {rate} | [{blo},{bhi}] | {seed} | {cells} |")
+    lines += ["", "Metrics glossary: see README.md § Reproducing the paper.",
+              ""]
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--grid", default="paper-smoke",
+                    help="scenario name (see repro.exp.scenarios)")
+    ap.add_argument("--out", default="artifacts/exp")
+    ap.add_argument("--cells-per-batch", type=int, default=8,
+                    help="workload cells per batched engine run")
+    ap.add_argument("--check-floors", action="store_true",
+                    help="exit non-zero on budget-met floor / makespan-win "
+                         "regressions")
+    args = ap.parse_args(argv)
+
+    scenario = get_scenario(args.grid)
+    print(f"grid {scenario.name}: {scenario.n_cells} cells "
+          f"({scenario.n_workload_cells} workloads x "
+          f"{len(scenario.policies)} policies)")
+    art = run_grid(scenario, cells_per_batch=args.cells_per_batch,
+                   verbose=True)
+
+    os.makedirs(args.out, exist_ok=True)
+    jpath = os.path.join(args.out, ARTIFACT_NAME)
+    with open(jpath, "w") as f:
+        json.dump(art, f, indent=2, sort_keys=True)
+        f.write("\n")
+    mpath = os.path.join(args.out, REPORT_NAME)
+    write_report(art, mpath)
+    print(f"artifact: {jpath}\nreport:   {mpath}")
+    for pol, s in art["summary_by_policy"].items():
+        print(f"  {pol:10s} mk={s['mean_makespan_s']:8.1f}s "
+              f"met={s['budget_met_mean']:6.1%} (min {s['budget_met_min']:6.1%}) "
+              f"util={s['utilization_mean']:6.1%}")
+    ratio = art.get("ebpsm_vs_mslbl_makespan_ratio")
+    if ratio is not None:
+        print(f"  EBPSM/MSLBL_MW makespan ratio: {ratio:.3f}")
+
+    if args.check_floors:
+        failures = check_floors(art)
+        if failures:
+            raise SystemExit("FLOOR FAILURES:\n  " + "\n  ".join(failures))
+        print("floor gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Scenario registry for the paper-grid evaluation.
+
+A :class:`Scenario` names one evaluation grid: applications × arrival
+rates × budget intervals × policies × seeds, plus the workload scale.
+The paper's experiment design (§5, workload construction following the
+authors' WaaS-platform paper) draws each cell's budgets uniformly from
+one quarter of the per-workflow ``[min_cost, max_cost]`` range — the four
+*budget intervals* — and streams a single application's workflows at a
+Poisson arrival rate.
+
+``paper`` is the full grid behind Figs. 3–4 (hours of simulated
+scheduling — run it with ``--full``-style patience); ``paper-smoke`` is
+the CI-sized reduction (2 apps × 2 rates × 2 budget intervals × all five
+policies × 1 seed) that the ``exp-smoke`` CI job gates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+from ..core.scheduler import ALL_POLICIES, Policy
+
+POLICY_BY_NAME: Dict[str, Policy] = {p.name: p for p in ALL_POLICIES}
+
+# The paper's four budget intervals over [min_cost, max_cost].
+PAPER_BUDGET_INTERVALS: Tuple[Tuple[float, float], ...] = (
+    (0.0, 0.25), (0.25, 0.5), (0.5, 0.75), (0.75, 1.0),
+)
+
+PAPER_APPS = ("cybershake", "epigenome", "ligo", "montage", "sipht")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadCell:
+    """One workload configuration (all policies simulate a clone of it)."""
+
+    app: str
+    rate: float                       # workflows / minute
+    budget_interval: Tuple[float, float]
+    seed: int                         # degradation seed; workload seed derives
+    index: int                        # stable position in the scenario grid
+
+    @property
+    def workload_seed(self) -> int:
+        """Deterministic per-cell workload draw, decorrelated from the
+        degradation seed (7919 = 1000th prime, no magic beyond reuse)."""
+        return 7919 * (self.seed + 1) + self.index
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    apps: Tuple[str, ...]
+    rates: Tuple[float, ...]
+    budget_intervals: Tuple[Tuple[float, float], ...]
+    policies: Tuple[str, ...]
+    seeds: Tuple[int, ...]
+    n_workflows: int                  # workflows per cell workload
+    sizes: Tuple[str, ...]
+    # CI floor: every EBPSM cell must keep budget-met % at or above this
+    # (recorded from the artifact trajectory; see exp-smoke in ci.yml).
+    ebpsm_budget_met_floor: float = 0.0
+
+    def workload_cells(self) -> Iterator[WorkloadCell]:
+        idx = 0
+        for app in self.apps:
+            for rate in self.rates:
+                for interval in self.budget_intervals:
+                    for seed in self.seeds:
+                        yield WorkloadCell(app, rate, interval, seed, idx)
+                        idx += 1
+
+    @property
+    def n_workload_cells(self) -> int:
+        return (len(self.apps) * len(self.rates)
+                * len(self.budget_intervals) * len(self.seeds))
+
+    @property
+    def n_cells(self) -> int:
+        return self.n_workload_cells * len(self.policies)
+
+
+ALL_POLICY_NAMES = tuple(p.name for p in ALL_POLICIES)
+
+SCENARIOS: Dict[str, Scenario] = {
+    "paper": Scenario(
+        name="paper",
+        description=("Full Figs. 3-4 grid: 5 Pegasus apps x arrival rates "
+                     "{0.5, 6, 12} wf/min x 4 budget intervals x all 5 "
+                     "policies x 3 seeds, 100 workflows per cell."),
+        apps=PAPER_APPS,
+        rates=(0.5, 6.0, 12.0),
+        budget_intervals=PAPER_BUDGET_INTERVALS,
+        policies=ALL_POLICY_NAMES,
+        seeds=(0, 1, 2),
+        n_workflows=100,
+        sizes=("small", "medium", "large"),
+        ebpsm_budget_met_floor=0.80,
+    ),
+    "paper-smoke": Scenario(
+        name="paper-smoke",
+        description=("CI reduction of the paper grid: 2 apps x 2 rates x "
+                     "2 budget intervals x all 5 policies x 1 seed, small "
+                     "workloads."),
+        apps=("montage", "sipht"),
+        rates=(0.5, 6.0),
+        budget_intervals=((0.25, 0.5), (0.75, 1.0)),
+        policies=ALL_POLICY_NAMES,
+        seeds=(0,),
+        n_workflows=10,
+        sizes=("small",),
+        ebpsm_budget_met_floor=0.90,
+    ),
+    "degradation": Scenario(
+        name="degradation",
+        description=("Figs. 5-6 companion: EBPSM vs MSLBL_MW under the "
+                     "default degradation model across rates and the two "
+                     "outer budget intervals."),
+        apps=("cybershake", "epigenome", "ligo"),
+        rates=(6.0,),
+        budget_intervals=((0.0, 0.25), (0.75, 1.0)),
+        policies=("EBPSM", "MSLBL_MW"),
+        seeds=(0, 1),
+        n_workflows=30,
+        sizes=("small", "medium"),
+        ebpsm_budget_met_floor=0.70,
+    ),
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise SystemExit(
+            f"unknown grid {name!r}; choose from {sorted(SCENARIOS)}"
+        ) from None

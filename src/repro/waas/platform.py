@@ -1,14 +1,15 @@
 """Multi-tenant TPU-slice WaaS platform: EBPSM scheduling ML jobs.
 
 Drives the *unchanged* core engine (policies, budget algebra, caches) on
-the slice catalogue + ML-job DAGs.  Produces the platform report: per-
-tenant makespan/cost/budget-met, slice utilization, locality hit rates
-(tier histogram — tier 1 = "weights already resident", the paper's
-data-sharing claim restated for ML), and a straggler-recovery comparison.
+the slice catalogue + ML-job DAGs.  Reporting rides the shared
+:mod:`repro.exp.metrics` collector (one schema for the paper grid and
+the ML bridge): per-tenant makespan/cost/budget-met, slice utilization,
+locality and sharing hit rates (tier 1 = "weights already resident", the
+paper's data-sharing claim restated for ML), and a straggler-recovery
+comparison.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -20,26 +21,49 @@ from ..core.jax_engine import (BatchSimEngine, GridMember,
                                predistribute_workload)
 from ..core.scheduler import ALL_POLICIES, EBPSM, MSLBL_MW, Policy
 from ..core.types import PlatformConfig, SimResult, Workflow, clone_workload
+from ..exp.metrics import CellMetrics, format_row
 from . import mljobs, slices
 
 
 @dataclasses.dataclass
 class PlatformReport:
-    policy: str
+    """One policy's platform run: the raw SimResult plus its collected
+    metrics (repro.exp.metrics.CellMetrics — the shared schema)."""
+
     sim: SimResult
-    tier_hist: Dict[int, int]
-    mean_makespan_s: float
-    p95_makespan_s: float
-    budget_met: float
-    utilization: float
+    metrics: CellMetrics
     slice_mix: Dict[str, int]
-    locality_hit_rate: float      # fraction of placements on warm data
+
+    @property
+    def policy(self) -> str:
+        return self.metrics.policy
+
+    @property
+    def tier_hist(self) -> Dict[int, int]:
+        return self.metrics.tier_hist
+
+    @property
+    def mean_makespan_s(self) -> float:
+        return self.metrics.mean_makespan_s
+
+    @property
+    def p95_makespan_s(self) -> float:
+        return self.metrics.p95_makespan_s
+
+    @property
+    def budget_met(self) -> float:
+        return self.metrics.budget_met
+
+    @property
+    def utilization(self) -> float:
+        return self.metrics.utilization
+
+    @property
+    def locality_hit_rate(self) -> float:
+        return self.metrics.locality_hit_rate
 
     def row(self) -> str:
-        return (f"{self.policy:10s} mk={self.mean_makespan_s:9.1f}s "
-                f"p95={self.p95_makespan_s:9.1f}s met={self.budget_met:6.2%} "
-                f"util={self.utilization:6.2%} "
-                f"warm={self.locality_hit_rate:6.2%} mix={self.slice_mix}")
+        return f"{format_row(self.metrics)} mix={self.slice_mix}"
 
 
 def assign_budgets(cfg: PlatformConfig, wfs: Sequence[Workflow],
@@ -56,19 +80,10 @@ def run_platform(wfs: Sequence[Workflow], policy: Policy,
     cfg = cfg or slices.platform_config()
     eng = SimEngine(cfg, policy, list(wfs), seed=seed, trace=True)
     sim = eng.run()
-    tiers = collections.Counter(r[3] for r in eng.trace_rows)
-    mks = np.array([w.makespan_ms for w in sim.workflows]) / 1000.0
-    placements = sum(tiers.values())
     return PlatformReport(
-        policy=policy.name,
         sim=sim,
-        tier_hist=dict(sorted(tiers.items())),
-        mean_makespan_s=float(mks.mean()),
-        p95_makespan_s=float(np.percentile(mks, 95)),
-        budget_met=sim.budget_met_fraction,
-        utilization=sim.avg_vm_utilization,
+        metrics=CellMetrics.from_result(policy.name, sim, eng.trace_rows),
         slice_mix=dict(eng.pool.vm_count_by_type),
-        locality_hit_rate=tiers.get(1, 0) / placements if placements else 0.0,
     )
 
 
@@ -117,18 +132,12 @@ def sweep(n_jobs: int = 24, rates: Sequence[float] = (1.0, 4.0),
                 members.append((pol, clone_workload(proto), s))
                 labels.append((pol.name, rate, s))
                 pre.append(spares)
-    results = BatchSimEngine(cfg, members, predistributed=pre).run()
+    engine = BatchSimEngine(cfg, members, trace=True, predistributed=pre)
+    results = engine.run()
     rows: List[Dict] = []
-    for (name, rate, s), res in zip(labels, results):
-        mks = np.array([w.makespan_ms for w in res.workflows]) / 1000.0
-        rows.append({
-            "policy": name, "rate_wf_per_min": rate, "seed": s,
-            "mean_makespan_s": float(mks.mean()),
-            "p95_makespan_s": float(np.percentile(mks, 95)),
-            "budget_met": res.budget_met_fraction,
-            "utilization": res.avg_vm_utilization,
-            "total_vms": res.total_vms,
-        })
+    for (name, rate, s), res, st in zip(labels, results, engine.states):
+        m = CellMetrics.from_result(name, res, st.trace_rows)
+        rows.append({"rate_wf_per_min": rate, "seed": s, **m.to_dict()})
     return rows
 
 

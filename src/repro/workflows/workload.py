@@ -34,6 +34,25 @@ class WorkloadSpec:
     budget_hi: float = 1.0
 
 
+def cell_workload(
+    cfg: PlatformConfig,
+    app: str,
+    rate: float,
+    budget_interval: Tuple[float, float],
+    seed: int,
+    n_workflows: int,
+    sizes: Tuple[str, ...] = ("small", "medium", "large"),
+) -> List[Workflow]:
+    """One evaluation-grid cell's workload: a single-application stream at
+    the given arrival rate, budgets drawn uniformly from one quarter (the
+    paper's four budget intervals) of the [min_cost, max_cost] range."""
+    lo, hi = budget_interval
+    spec = WorkloadSpec(n_workflows=n_workflows, arrival_rate_per_min=rate,
+                        apps=(app,), sizes=sizes, seed=seed,
+                        budget_lo=lo, budget_hi=hi)
+    return generate_workload(cfg, spec)
+
+
 def generate_workload(
     cfg: PlatformConfig, spec: WorkloadSpec
 ) -> List[Workflow]:

@@ -1,0 +1,147 @@
+"""core.cost_tables: bit-exact agreement with the scalar cost model,
+memoization/sharing semantics, and distribution equivalence."""
+import numpy as np
+import pytest
+
+from repro.core import budget as bmod
+from repro.core import cost_tables, costs
+from repro.core.types import PlatformConfig, clone_workload
+from repro.workflows.dax import APP_NAMES, generate_workflow
+
+CFG = PlatformConfig()
+
+
+def wf_of(app, seed=0, n=30):
+    return generate_workflow(app, 0, n, np.random.default_rng(seed))
+
+
+@pytest.mark.parametrize("app", APP_NAMES)
+def test_table_matches_scalar_cost_model_bit_exact(app):
+    """Every table entry equals the scalar reference — not approximately:
+    the tolerance-ceil discretization must land on the same integer ms and
+    the billing on the same cent, or the two engines' budget algebra
+    diverges."""
+    wf = wf_of(app, seed=7)
+    table = cost_tables.build_table(CFG, wf)
+    for t in wf.tasks:
+        mb = bmod.input_mb(wf, t)
+        assert table.in_mb[t.tid] == mb
+        for v, vmt in enumerate(CFG.vm_types):
+            assert table.proc_ms[t.tid, v] == costs.processing_ms(
+                CFG, vmt, t, mb)
+            assert table.rt_out_ms[t.tid, v] == (
+                costs.runtime_ms(vmt, t.size_mi)
+                + costs.transfer_out_ms(CFG, vmt, t.out_mb))
+            assert table.est_full_cost[t.tid, v] == costs.estimate_full_cost(
+                CFG, vmt, t, mb)
+            assert table.cost_bare[t.tid, v] == costs.task_cost(
+                CFG, vmt, t, mb, include_vm_provision=False, container_ms=0)
+
+
+def test_table_memoized_and_shared_by_clones():
+    wf = wf_of("montage", seed=3)
+    t1 = cost_tables.table_for(CFG, wf)
+    assert cost_tables.table_for(CFG, wf) is t1
+    clone = wf.clone()
+    assert cost_tables.table_for(CFG, clone) is t1
+    grid = clone_workload([wf])
+    assert cost_tables.table_for(CFG, grid[0]) is t1
+
+
+def test_table_invalidated_by_config_change():
+    wf = wf_of("sipht", seed=4)
+    t1 = cost_tables.table_for(CFG, wf)
+    cfg2 = CFG.with_(gs_read_mbps=25.0)
+    t2 = cost_tables.table_for(cfg2, wf)
+    assert t2 is not t1
+    assert (t2.proc_ms != t1.proc_ms).any()
+    # Same-value config (fresh object) hits the cache by equality.
+    assert cost_tables.table_for(PlatformConfig(), wf) is t2 or \
+        cost_tables.table_for(PlatformConfig(), wf).cfg == PlatformConfig()
+
+
+def _distribute_budget_scalar(cfg, wf, budget, task_ids=None):
+    """The pre-table reference implementation of Algorithm 1 (verbatim
+    semantics: sequential pass-1 allocation + one-tier SFTD sweeps)."""
+    if task_ids is None:
+        order = bmod.execution_order(cfg, wf)
+    else:
+        order = sorted(task_ids, key=lambda tid: wf.tasks[tid].rank)
+    if not order:
+        return budget
+    cheapest = cfg.vm_types[0]
+    alloc = {}
+    remaining = budget
+    for tid in order:
+        t = wf.tasks[tid]
+        want = costs.estimate_full_cost(cfg, cheapest, t, bmod.input_mb(wf, t))
+        give = min(want, max(remaining, 0.0))
+        alloc[tid] = give
+        remaining -= give
+    if remaining > 0:
+        by_speed = sorted(range(len(cfg.vm_types)),
+                          key=lambda i: cfg.vm_types[i].mips)
+        tier_cost = {}
+        tier_of = {}
+        for tid in order:
+            t = wf.tasks[tid]
+            mb = bmod.input_mb(wf, t)
+            tier_cost[tid] = [
+                costs.estimate_full_cost(cfg, cfg.vm_types[i], t, mb)
+                for i in by_speed
+            ]
+            tier_of[tid] = 0
+            for k in range(len(by_speed) - 1, -1, -1):
+                if alloc[tid] >= tier_cost[tid][k] - 1e-9:
+                    tier_of[tid] = k
+                    break
+        changed = True
+        while remaining > 1e-9 and changed:
+            changed = False
+            for tid in order:
+                k = tier_of[tid]
+                if k + 1 >= len(by_speed):
+                    continue
+                delta = tier_cost[tid][k + 1] - alloc[tid]
+                if 0 < delta <= remaining + 1e-9:
+                    alloc[tid] = tier_cost[tid][k + 1]
+                    tier_of[tid] = k + 1
+                    remaining -= delta
+                    changed = True
+                elif delta <= 0:
+                    tier_of[tid] = k + 1
+                    changed = True
+    return alloc, max(remaining, 0.0)
+
+
+@pytest.mark.parametrize("app", ["montage", "cybershake", "epigenome"])
+@pytest.mark.parametrize("frac", [0.1, 0.5, 0.9])
+def test_distribute_budget_equals_scalar_reference(app, frac):
+    wf = wf_of(app, seed=11)
+    lo, hi = bmod.min_max_workflow_cost(CFG, wf)
+    beta = lo + frac * (hi - lo)
+    ref_alloc, ref_left = _distribute_budget_scalar(CFG, wf.clone(), beta)
+    left = bmod.distribute_budget(CFG, wf, beta)
+    for tid, want in ref_alloc.items():
+        assert wf.tasks[tid].budget == pytest.approx(want, abs=1e-6)
+    assert left == pytest.approx(ref_left, abs=1e-6)
+
+
+def test_min_max_matches_scalar():
+    wf = wf_of("ligo", seed=5)
+    lo, hi = bmod.min_max_workflow_cost(CFG, wf)
+    cheapest = CFG.vm_types[0]
+    fastest = max(CFG.vm_types, key=lambda v: v.mips)
+    ref_lo = sum(
+        costs.task_cost(CFG, cheapest, t, bmod.input_mb(wf, t),
+                        include_vm_provision=False, container_ms=0)
+        for t in wf.tasks
+    ) + costs.billed_cost(
+        CFG, cheapest,
+        CFG.vm_provision_delay_ms + CFG.container_provision_ms)
+    ref_hi = sum(
+        costs.estimate_full_cost(CFG, fastest, t, bmod.input_mb(wf, t))
+        for t in wf.tasks
+    )
+    assert lo == pytest.approx(ref_lo, rel=1e-12)
+    assert hi == pytest.approx(ref_hi, rel=1e-12)

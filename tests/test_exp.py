@@ -1,0 +1,152 @@
+"""repro.exp: scenario registry, metrics collection, grid harness."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.engine import SimEngine
+from repro.core.scheduler import EBPSM
+from repro.core.types import PlatformConfig
+from repro.exp import run as exp_run
+from repro.exp.metrics import CellMetrics, aggregate_by_policy, format_row
+from repro.exp.scenarios import SCENARIOS, Scenario, get_scenario
+from repro.workflows.workload import WorkloadSpec, generate_workload
+
+CFG = PlatformConfig()
+
+TINY = Scenario(
+    name="unit-tiny",
+    description="unit-test grid",
+    apps=("montage",),
+    rates=(6.0,),
+    budget_intervals=((0.5, 1.0),),
+    policies=("EBPSM", "MSLBL_MW"),
+    seeds=(0,),
+    n_workflows=4,
+    sizes=("small",),
+    ebpsm_budget_met_floor=0.5,
+)
+
+
+def test_registry_contains_paper_grids():
+    for name in ("paper", "paper-smoke"):
+        s = get_scenario(name)
+        assert s.n_cells == s.n_workload_cells * len(s.policies)
+    assert SCENARIOS["paper"].apps == (
+        "cybershake", "epigenome", "ligo", "montage", "sipht")
+    assert len(SCENARIOS["paper"].budget_intervals) == 4
+    with pytest.raises(SystemExit):
+        get_scenario("no-such-grid")
+
+
+def test_workload_cells_are_deterministic_and_distinct():
+    s = get_scenario("paper-smoke")
+    cells = list(s.workload_cells())
+    assert len(cells) == s.n_workload_cells
+    assert [c.index for c in cells] == list(range(len(cells)))
+    seeds = {c.workload_seed for c in cells}
+    assert len(seeds) == len(cells)  # no two cells share a workload draw
+    assert list(s.workload_cells())[0].workload_seed == cells[0].workload_seed
+
+
+def test_cell_metrics_from_result():
+    wl = generate_workload(CFG, WorkloadSpec(
+        n_workflows=4, arrival_rate_per_min=6.0, sizes=("small",),
+        seed=1, budget_lo=0.5, budget_hi=1.0))
+    eng = SimEngine(CFG, EBPSM, wl, seed=0, trace=True)
+    res = eng.run()
+    m = CellMetrics.from_result("EBPSM", res, eng.trace_rows)
+    assert m.n_workflows == 4
+    assert m.mean_makespan_s > 0
+    assert 0.0 <= m.budget_met <= 1.0
+    assert 0.0 <= m.utilization <= 1.0
+    assert 0.0 <= m.data_cache_hit_rate <= 1.0
+    assert 0.0 <= m.container_hit_rate <= 1.0
+    assert sum(m.tier_hist.values()) == sum(w.n_tasks for w in wl)
+    d = m.to_dict()
+    assert d["policy"] == "EBPSM"
+    assert "locality_hit_rate" in d
+    assert "EBPSM" in format_row(m)
+    agg = aggregate_by_policy([m, m])
+    assert agg["EBPSM"]["cells"] == 2
+    assert agg["EBPSM"]["mean_makespan_s"] == pytest.approx(m.mean_makespan_s)
+
+
+def test_container_warmth_classified_by_state_not_delay():
+    """Cold provisions must be counted as cold even when the config makes
+    the init and full-provision delays coincide (classification reads the
+    VM's pre-activation state, not the returned ms)."""
+    cfg = CFG.with_(container_download_ms=0)
+    wl = generate_workload(cfg, WorkloadSpec(
+        n_workflows=4, arrival_rate_per_min=6.0, sizes=("small",),
+        seed=2, budget_lo=0.5, budget_hi=1.0))
+    res = SimEngine(cfg, EBPSM, wl, seed=0).run()
+    assert res.container_cold > 0  # every first activation is a download
+    assert res.container_warm + res.container_init + res.container_cold \
+        == sum(w.n_tasks for w in wl)
+
+
+def test_run_grid_end_to_end(tmp_path):
+    art = exp_run.run_grid(TINY, cells_per_batch=2)
+    assert art["bench"] == "paper_grid"
+    assert len(art["cells"]) == TINY.n_cells == 2
+    for row in art["cells"]:
+        assert row["app"] == "montage"
+        assert row["policy"] in ("EBPSM", "MSLBL_MW")
+        for key in ("mean_makespan_s", "mean_cost_budget_ratio",
+                    "budget_met", "utilization", "data_cache_hit_rate",
+                    "container_hit_rate"):
+            assert np.isfinite(row[key])
+    assert set(art["summary_by_policy"]) == {"EBPSM", "MSLBL_MW"}
+    assert art["ebpsm_vs_mslbl_makespan_ratio"] is not None
+
+    jpath = tmp_path / "BENCH_paper_grid.json"
+    jpath.write_text(json.dumps(art))
+    assert json.loads(jpath.read_text())["scenario"] == "unit-tiny"
+
+    mpath = tmp_path / "paper_grid.md"
+    exp_run.write_report(art, str(mpath))
+    text = mpath.read_text()
+    assert "Summary by policy" in text and "MSLBL_MW" in text
+
+
+def test_check_floors_flags_regressions():
+    art = exp_run.run_grid(TINY, cells_per_batch=2)
+    assert exp_run.check_floors(art) == []  # healthy grid passes
+    # Budget-met floor violation on an EBPSM cell is reported with its
+    # coordinates; MSLBL cells are never floor-gated.
+    bad = json.loads(json.dumps(art))
+    for row in bad["cells"]:
+        if row["policy"] == "EBPSM":
+            row["budget_met"] = 0.0
+    fails = exp_run.check_floors(bad)
+    assert fails and "budget-met" in fails[0]
+    # Losing the headline makespan win is a failure too.
+    worse = json.loads(json.dumps(art))
+    worse["ebpsm_vs_mslbl_makespan_ratio"] = 1.2
+    assert any("beats" in f or "ratio" in f
+               for f in exp_run.check_floors(worse))
+
+
+def test_grid_matches_sequential_reference():
+    """The harness's batched cells equal a sequential SimEngine run of the
+    same predistributed clone — the exp subsystem inherits engine parity."""
+    from repro.core.jax_engine import predistribute_workload
+    from repro.core.types import clone_workload
+    from repro.exp.scenarios import POLICY_BY_NAME
+    from repro.workflows.workload import cell_workload
+
+    cell = next(iter(TINY.workload_cells()))
+    wl = cell_workload(CFG, cell.app, cell.rate, cell.budget_interval,
+                       cell.workload_seed, TINY.n_workflows, TINY.sizes)
+    art = exp_run.run_grid(TINY, cells_per_batch=1)
+    for pol_name in TINY.policies:
+        pol = POLICY_BY_NAME[pol_name]
+        proto, spares = predistribute_workload(CFG, wl, pol.budget_mode)
+        ref = SimEngine(CFG, pol, clone_workload(proto), seed=cell.seed,
+                        predistributed=spares).run()
+        row = next(r for r in art["cells"] if r["policy"] == pol_name)
+        mks = np.array([w.makespan_ms for w in ref.workflows], np.float64)
+        assert row["mean_makespan_s"] == pytest.approx(
+            float(mks.mean()) / 1000.0, rel=1e-12)
+        assert row["budget_met"] == pytest.approx(ref.budget_met_fraction)

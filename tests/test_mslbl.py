@@ -1,0 +1,122 @@
+"""MSLBL_MW budget mechanics: budget-level clipping at both extremes and
+the single-spare-pool rollover on task completion (engine path)."""
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core.budget import input_mb
+from repro.core.engine import SimEngine
+from repro.core.mslbl import distribute_budget_mslbl
+from repro.core.scheduler import MSLBL_MW
+from repro.core.types import PlatformConfig, Task, Workflow
+from repro.workflows.dax import generate_workflow
+
+CFG = PlatformConfig()
+
+
+def _minmax_costs(wf):
+    cheap = min(CFG.vm_types, key=lambda v: v.mips)
+    fast = max(CFG.vm_types, key=lambda v: v.mips)
+    c_min, c_max = [], []
+    for t in wf.tasks:
+        mb = input_mb(wf, t)
+        c_min.append(costs.estimate_full_cost(CFG, cheap, t, mb))
+        c_max.append(costs.estimate_full_cost(CFG, fast, t, mb))
+    return c_min, c_max
+
+
+@pytest.mark.parametrize("app", ["montage", "cybershake"])
+def test_budget_level_clips_low(app):
+    """β below Σ c_min ⇒ level clipped to 0 ⇒ every task gets exactly its
+    cheapest-execution cost (the safety net never under-allocates)."""
+    wf = generate_workflow(app, 0, 30, np.random.default_rng(1))
+    c_min, _ = _minmax_costs(wf)
+    distribute_budget_mslbl(CFG, wf, budget=0.5 * sum(c_min))
+    for t in wf.tasks:
+        assert t.budget == pytest.approx(c_min[t.tid], rel=1e-12)
+
+
+@pytest.mark.parametrize("app", ["montage", "sipht"])
+def test_budget_level_clips_high(app):
+    """β above Σ c_max ⇒ level clipped to 1 ⇒ every task gets exactly its
+    fastest-execution cost (surplus is never distributed past c_max)."""
+    wf = generate_workflow(app, 0, 30, np.random.default_rng(2))
+    _, c_max = _minmax_costs(wf)
+    distribute_budget_mslbl(CFG, wf, budget=2.0 * sum(c_max))
+    for t in wf.tasks:
+        assert t.budget == pytest.approx(c_max[t.tid], rel=1e-12)
+
+
+def test_budget_level_interpolates_midrange():
+    wf = generate_workflow("ligo", 0, 25, np.random.default_rng(3))
+    c_min, c_max = _minmax_costs(wf)
+    lo, hi = sum(c_min), sum(c_max)
+    beta = lo + 0.5 * (hi - lo)
+    distribute_budget_mslbl(CFG, wf, budget=beta)
+    level = (beta - lo) / (hi - lo)
+    for t in wf.tasks:
+        want = c_min[t.tid] + level * (c_max[t.tid] - c_min[t.tid])
+        assert t.budget == pytest.approx(want, rel=1e-9)
+    # The safety net conserves the budget level exactly.
+    assert sum(t.budget for t in wf.tasks) == pytest.approx(beta, rel=1e-9)
+
+
+def _chain_wf(b0: float, b1: float) -> Workflow:
+    """Two-task chain with hand-set sub-budgets (predistributed path)."""
+    t0 = Task(tid=0, size_mi=10.0, out_mb=0.0)
+    t1 = Task(tid=1, size_mi=10.0, out_mb=0.0)
+    t0.children.append(1)
+    t1.parents.append(0)
+    wf = Workflow(wid=0, app="bench", tasks=[t0, t1], budget=b0 + b1)
+    wf.validate()
+    t0.budget, t1.budget = b0, b1
+    return wf
+
+
+def _run_chain(b0: float, b1: float) -> SimEngine:
+    eng = SimEngine(CFG, MSLBL_MW, [_chain_wf(b0, b1)], seed=0, trace=True,
+                    predistributed={0: 0.0})
+    eng.run()
+    return eng
+
+
+def test_spare_pool_rollover_unlocks_successor():
+    """Task 0 under-spends its generous allocation; the leftover rolls
+    into the single spare pool and funds task 1 (whose own sub-budget is
+    zero): the successor schedules in-budget (tier 3 reuse) instead of
+    falling to the insufficient-budget tier 5."""
+    eng = _run_chain(b0=150.0, b1=0.0)
+    tier_of = {row[2]: row[3] for row in eng.trace_rows}
+    assert tier_of[1] == 3, eng.trace_rows
+
+    # Control: no leftover (task 0's allocation is fully consumed), so the
+    # spare pool stays empty and task 1 hits the tier-5 fallback.
+    ctl = _run_chain(b0=0.0, b1=0.0)
+    ctl_tier_of = {row[2]: row[3] for row in ctl.trace_rows}
+    assert ctl_tier_of[1] == 5, ctl.trace_rows
+
+
+def test_spare_pool_accounting_is_single_pool():
+    """Spare = Σ(allocation − actual) − Σ consumed-at-scheduling: one pool
+    per workflow, debited by the amount the placement estimate exceeds the
+    task's own sub-budget."""
+    eng = _run_chain(b0=150.0, b1=0.0)
+    st = eng.wf_state[0]
+    res = eng.finalize()
+    total_actual = res.workflows[0].cost
+    # Task 1's placement estimate (5 cents: 5 s pipeline on the idle small
+    # VM) was debited from the pool; both tasks' (budget − actual) flowed in.
+    est1 = next(row[4] for row in eng.trace_rows if row[2] == 1)
+    assert st.spare == pytest.approx(150.0 + 0.0 - total_actual - est1,
+                                     abs=1e-9)
+
+
+def test_spare_never_negative_at_scheduling():
+    """The scheduler only ever debits what the pool holds (no negative
+    effective budgets from the rollover)."""
+    eng = _run_chain(b0=0.0, b1=0.0)
+    st = eng.wf_state[0]
+    # Pool went negative only through the *finish* accounting (debt),
+    # never through scheduling debits beyond the held amount.
+    assert st.spare == pytest.approx(-eng.finalize().workflows[0].cost,
+                                     abs=1e-9)
