@@ -1,0 +1,138 @@
+"""End-to-end wall clock of the paper-smoke evaluation grid.
+
+Times ``repro.exp.run.run_grid("paper-smoke")`` — the exact grid the
+``exp-smoke`` CI job gates on — in three dispatch modes on the same
+machine, same process, warmed:
+
+* ``legacy``  — PR 3-style dispatch: scalar ``select`` everywhere and
+  the per-member ``queue×pool ≥ AUCTION_MIN_PAIRS_GRID`` auction rule
+  (which essentially never fires at smoke scale).  A conservative
+  baseline: it still benefits from every non-dispatch optimization in
+  the current tree, so the recorded speedups *understate* the drop
+  against the real PR 3 checkout (see ``pr3_reference``).
+* ``serial``  — current defaults: aggregate-round auction
+  (``AUCTION_MIN_PAIRS_ROUND``), vectorized/fused ``select``, serial
+  tail drain, one process.
+* ``workers`` — same, fanned over a warm ``--workers`` process pool
+  (cells are independent; the pool is started before timing and its
+  cold-start cost is recorded separately).
+
+The artifact (``BENCH_grid_wall.json``) carries the walls, the
+speedups, and the serial run's aggregate-auction dispatch stats
+(``batched_calls``, aggregate-pairs histogram, per-member pair extremes)
+— the observable proof that the auction now engages on rounds whose
+individual members sit far below the old 2048-pair threshold.
+``benchmarks.check_speedup --grid-floor`` gates the workers-vs-legacy
+speedup in CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.core import scheduler as _sched
+from repro.exp.run import grid_executor, run_grid
+from repro.exp.scenarios import get_scenario
+from repro.kernels.affinity import ops as aff_ops
+
+GRID = "paper-smoke"
+REPEATS = 3
+
+# PR 3 checkout (17a77de) measured on the dev machine with the same
+# best-of protocol (warmed, in-process): recorded for provenance — CI
+# machines differ, so the CI gate uses the same-run legacy mode above.
+PR3_REFERENCE_WALL_S = 1.21
+
+_LAST: Optional[Dict] = None
+
+
+def _best_wall(fn, repeats: int = REPEATS) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure(full: bool = False) -> Dict:
+    sc = get_scenario(GRID)
+    repeats = REPEATS + 2 if full else REPEATS
+
+    # Warm every code path once (jit traces, cost tables, scenario gen).
+    art_serial = run_grid(sc, trace=True)
+
+    forced = _sched._SCALAR_FORCED
+    _sched._SCALAR_FORCED = True
+    try:
+        wall_legacy = _best_wall(
+            lambda: run_grid(sc, trace=True, batched="member"), repeats)
+    finally:
+        _sched._SCALAR_FORCED = forced
+
+    wall_serial = _best_wall(lambda: run_grid(sc, trace=True), repeats)
+
+    n_workers = min(2, os.cpu_count() or 1)
+    wall_workers = None
+    workers_cold_s = None
+    if n_workers > 1:
+        t0 = time.perf_counter()
+        ex = grid_executor(n_workers)
+        try:
+            run_grid(sc, trace=True, workers=n_workers, executor=ex)  # warm
+            workers_cold_s = time.perf_counter() - t0
+            wall_workers = _best_wall(
+                lambda: run_grid(sc, trace=True, workers=n_workers,
+                                 executor=ex),
+                repeats)
+        finally:
+            ex.shutdown()
+
+    d = art_serial["dispatch"]
+    return {
+        "bench": "grid_wall",
+        "grid": GRID,
+        "repeats": repeats,
+        "n_cells": art_serial["n_cells"],
+        "wall_legacy_s": wall_legacy,
+        "wall_serial_s": wall_serial,
+        "wall_workers_s": wall_workers,
+        "workers": n_workers if wall_workers is not None else 1,
+        "workers_cold_start_s": workers_cold_s,
+        "speedup_serial_vs_legacy": wall_legacy / wall_serial,
+        "speedup_workers_vs_legacy": (
+            wall_legacy / wall_workers if wall_workers else None),
+        "pr3_reference": {
+            "wall_s": PR3_REFERENCE_WALL_S,
+            "commit": "17a77de",
+            "note": "same protocol, dev machine; legacy mode above is the "
+                    "in-tree (conservative) stand-in for CI gating",
+        },
+        "speedup_vs_pr3_reference": (
+            PR3_REFERENCE_WALL_S / (wall_workers or wall_serial)),
+        "use_pallas_resolved": aff_ops.resolve_use_pallas("auto"),
+        "dispatch": d,
+        "auction_engaged": d["batched_calls"] > 0,
+        "auction_engaged_below_member_threshold": bool(
+            d["batched_cycles"] > 0
+            and d["min_member_pairs_batched"] < 2048),
+    }
+
+
+def run(full: bool = False) -> List[Dict]:
+    global _LAST
+    _LAST = _measure(full)
+    keys = ("wall_legacy_s", "wall_serial_s", "wall_workers_s",
+            "speedup_serial_vs_legacy", "speedup_workers_vs_legacy",
+            "speedup_vs_pr3_reference")
+    row = {k: _LAST[k] for k in keys}
+    row["batched_calls"] = _LAST["dispatch"]["batched_calls"]
+    row["serial_cycles"] = _LAST["dispatch"]["serial_cycles"]
+    row["batched_cycles"] = _LAST["dispatch"]["batched_cycles"]
+    return [row]
+
+
+def artifact(rows: List[Dict]) -> Dict:
+    assert _LAST is not None, "run() must precede artifact()"
+    return _LAST

@@ -12,8 +12,9 @@ import time
 import traceback
 
 from . import (bench_container_delay, bench_cost_ratio,
-               bench_cpu_degradation, bench_makespan, bench_prov_delay,
-               bench_roofline, bench_sched_throughput, bench_waas_ml)
+               bench_cpu_degradation, bench_grid_wall, bench_makespan,
+               bench_prov_delay, bench_roofline, bench_sched_throughput,
+               bench_waas_ml)
 from .common import print_rows, write_json
 
 BENCHES = {
@@ -23,6 +24,7 @@ BENCHES = {
     "container_delay": (bench_container_delay, "Fig9 container delay"),
     "cost_ratio": (bench_cost_ratio, "Table3 violated cost/budget"),
     "sched_throughput": (bench_sched_throughput, "Alg2 kernel throughput"),
+    "grid_wall": (bench_grid_wall, "paper-smoke grid end-to-end wall"),
     "waas_ml": (bench_waas_ml, "WaaS->ML bridge platform"),
     "roofline": (bench_roofline, "roofline from dry-run artifacts"),
 }

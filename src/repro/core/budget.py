@@ -88,7 +88,177 @@ def execution_order(cfg: PlatformConfig, wf: Workflow) -> List[int]:
     )
     for rank, tid in enumerate(order):
         wf.tasks[tid].rank = rank
+    wf.rank_cache = None   # ranks changed; drop the memoized list
     return order
+
+
+# Subsets up to this size take the pure-Python distribution path: ~20
+# numpy dispatches cost more than the loop at Algorithm 3's per-finish
+# call sizes.  Both paths execute the identical float64 operation
+# sequence, so the cutover is invisible in results (bit-exact).
+_PY_DISTRIBUTE_MAX = 64
+
+
+def _sum_like_numpy(values: List[float]) -> float:
+    """``float(np.sum(np.asarray(values)))`` without the array round-trip
+    for the small-n regime, preserving numpy's exact summation order:
+    n < 8 is a plain sequential reduction; 8 ≤ n ≤ 128 is the 8-lane
+    pairwise block numpy uses below its recursion blocksize.  Falls back
+    to numpy above that, and the replication is verified at import
+    (``_SUM_VERIFIED``) so a change in numpy's reduction would be
+    caught, not silently diverge."""
+    n = len(values)
+    if not _SUM_VERIFIED or n > 128:
+        return float(np.sum(np.asarray(values)))
+    if n < 8:
+        s = 0.0
+        for x in values:
+            s += x
+        return s
+    r0, r1, r2, r3, r4, r5, r6, r7 = values[:8]
+    i = 8
+    stop = n - (n % 8)
+    while i < stop:
+        r0 += values[i]
+        r1 += values[i + 1]
+        r2 += values[i + 2]
+        r3 += values[i + 3]
+        r4 += values[i + 4]
+        r5 += values[i + 5]
+        r6 += values[i + 6]
+        r7 += values[i + 7]
+        i += 8
+    s = ((r0 + r1) + (r2 + r3)) + ((r4 + r5) + (r6 + r7))
+    while i < n:
+        s += values[i]
+        i += 1
+    return s
+
+
+def _verify_sum_compat() -> bool:
+    global _SUM_VERIFIED
+    _SUM_VERIFIED = True   # let _sum_like_numpy take the scalar paths
+    rng = np.random.default_rng(0)
+    for n in (*range(1, 18), 31, 64, 65, 127, 128):
+        a = (rng.random(n) * rng.integers(1, 1000, n)).tolist()
+        if _sum_like_numpy(a) != float(np.sum(np.asarray(a))):
+            return False
+    return True
+
+
+_SUM_VERIFIED = _verify_sum_compat()
+
+
+def _distribute_small(wf: Workflow, table, budget: float,
+                      order: List[int]) -> float:
+    """Pure-Python Algorithm 1 passes for small ``order`` subsets.
+
+    Mirrors the vectorized body below operation-for-operation: pass 1 is
+    the same sequential cumulative sum (``np.cumsum`` adds in index
+    order) with ``remaining`` from the numpy-order total, and the SFTD
+    sweep reads the table's plain-list mirror.
+
+    The sweep keeps a *live* row list instead of re-scanning everything:
+    ``remaining`` only ever decreases, and a row's upgrade delta is
+    unchanged until the row itself upgrades — so a row that once fails
+    the paid-upgrade check can never succeed later and is dropped, and a
+    row at the top tier is done.  The rows it visits make exactly the
+    decisions the full re-scan would (skipped rows change nothing), so
+    allocations are bit-identical.
+    """
+    cheap = table.cheap_list
+    running = 0.0
+    alloc: List[float] = []
+    for tid in order:
+        w = cheap[tid]
+        running = running + w
+        avail = budget - (running - w)
+        if avail < 0.0:
+            avail = 0.0
+        alloc.append(w if w < avail else avail)
+    remaining = max(budget - _sum_like_numpy(alloc), 0.0)
+
+    if remaining > 1e-9:
+        tier_list = table.tier_list
+        K = len(tier_list[0])
+        top = K - 1
+        # "Everyone tops out" shortcut: with nondecreasing tier costs,
+        # the sweep's total consumption to bring every row to the top
+        # tier is exactly Σ(top − alloc); when the remainder covers that
+        # with margin (the 1e-6 safety dwarfs any accumulated rounding in
+        # the ≤ U·K subtractions the sweep would make, so every paid
+        # check the sweep would run is guaranteed to pass), the fixed
+        # point is known without sweeping.
+        if table.tiers_monotone:
+            top_l = table.top_list
+            need = 0.0
+            for u, tid in enumerate(order):
+                need += top_l[tid] - alloc[u]
+            if remaining > need + 1e-6:
+                remaining -= need
+                tasks = wf.tasks
+                for pos, tid in enumerate(order):
+                    tasks[tid].budget = top_l[tid]
+                return max(remaining, 0.0)
+        # First sweep fused with tier-discovery: current tier = highest
+        # covered (same `alloc >= tier_cost - 1e-9` predicate as the
+        # array path), then the usual one-tier upgrade attempt.  Upgrade
+        # attempts continue through the whole sweep even once
+        # ``remaining`` dips under the sweep-entry threshold — exactly
+        # the reference loop's within-sweep behavior.
+        live: List[list] = []   # [u, k, row] for rows that may still move
+        monotone = table.tiers_monotone
+        for u, a in enumerate(alloc):
+            row = tier_list[order[u]]
+            if monotone:
+                # Nondecreasing row ⇒ the covered set is a prefix: walk
+                # up and stop at the first uncovered tier (same result
+                # as the descending scan, fewer comparisons — most rows
+                # sit at low tiers).
+                k = 0
+                for j in range(1, K):
+                    if a >= row[j] - 1e-9:
+                        k = j
+                    else:
+                        break
+            else:
+                k = 0
+                for j in range(top, -1, -1):
+                    if a >= row[j] - 1e-9:
+                        k = j
+                        break
+            if k >= top:
+                continue
+            delta = row[k + 1] - a
+            if 0 < delta <= remaining + 1e-9:
+                alloc[u] = row[k + 1]
+                remaining -= delta
+                k += 1
+            elif delta <= 0:
+                k += 1
+            else:
+                continue  # paid check failed: can never succeed later
+            if k < top:
+                live.append([u, k, row])
+        while live and remaining > 1e-9:
+            nxt: List[list] = []
+            for item in live:
+                u, k, row = item
+                delta = row[k + 1] - alloc[u]
+                if 0 < delta <= remaining + 1e-9:
+                    alloc[u] = row[k + 1]
+                    remaining -= delta
+                elif delta > 0:
+                    continue  # dropped forever
+                item[1] = k = k + 1
+                if k < top:
+                    nxt.append(item)
+            live = nxt
+
+    tasks = wf.tasks
+    for pos, tid in enumerate(order):
+        tasks[tid].budget = alloc[pos]
+    return max(remaining, 0.0)
 
 
 def distribute_budget(
@@ -96,6 +266,7 @@ def distribute_budget(
     wf: Workflow,
     budget: float,
     task_ids: Optional[Sequence[int]] = None,
+    presorted: bool = False,
 ) -> float:
     """Algorithm 1.  Mutates ``task.budget``; returns the undistributed
     remainder (spare budget — Alg. 3 folds it into the next update so no
@@ -119,12 +290,22 @@ def distribute_budget(
     """
     if task_ids is None:
         order = execution_order(cfg, wf)
+    elif presorted:
+        order = task_ids
     else:
-        order = sorted(task_ids, key=lambda tid: wf.tasks[tid].rank)
+        ranks = wf.rank_cache
+        if ranks is None:
+            # Ranks are frozen once the arrival-time distribution ran;
+            # the per-finish Algorithm 3 path sorts against this list
+            # instead of a per-call attribute-chasing lambda.
+            wf.rank_cache = ranks = [t.rank for t in wf.tasks]
+        order = sorted(task_ids, key=ranks.__getitem__)
     if not order:
         return budget
 
     table = cost_tables.table_for(cfg, wf)
+    if len(order) <= _PY_DISTRIBUTE_MAX:
+        return _distribute_small(wf, table, budget, order)
     order_arr = np.asarray(order, np.int64)
     # Pass 1: cheapest-VM conservative cost, allocated while the pool
     # lasts — give_i = min(want_i, max(β − Σ_{<i} give, 0)), as a masked
@@ -142,25 +323,44 @@ def distribute_budget(
     # workflow climbs the VM ladder together instead of splitting into a
     # fastest/cheapest bimodal mix (which would pollute the shared pool with
     # slow cache-carrier VMs).
+    give = alloc.tolist()
+    if remaining > 1e-9 and table.tiers_monotone:
+        # Same "everyone tops out" shortcut as the small-subset path,
+        # with the identical scalar accumulation so both paths stay
+        # bit-exact around the size cutover.
+        top_l = table.top_list
+        need = 0.0
+        for u, tid in enumerate(order):
+            need += top_l[tid] - give[u]
+        if remaining > need + 1e-6:
+            remaining -= need
+            tasks = wf.tasks
+            for tid in order:
+                tasks[tid].budget = top_l[tid]
+            return max(remaining, 0.0)
     if remaining > 0:
-        tier_cost = table.est_full_cost[order_arr[:, None],
-                                        table.by_speed[None, :]]
+        tier_cost = table.tier_cost[order_arr]
         K = tier_cost.shape[1]
         # Current tier: highest tier fully covered by the allocation.
         covered = alloc[:, None] >= tier_cost - 1e-9
         any_cov = covered.any(axis=1)
         highest = K - 1 - np.argmax(covered[:, ::-1], axis=1)
-        tier_of = np.where(any_cov, highest, 0)
+        tier_of = np.where(any_cov, highest, 0).tolist()
+        # The sweep itself runs on plain Python floats (the same IEEE
+        # doubles the array holds — ``tolist`` is value-preserving), which
+        # is several times faster than per-element numpy indexing on the
+        # per-finish Algorithm 3 hot path.
+        tc = tier_cost.tolist()
         changed = True
         while remaining > 1e-9 and changed:
             changed = False
-            for u in range(len(order)):
-                k = int(tier_of[u])
+            for u in range(len(give)):
+                k = tier_of[u]
                 if k + 1 >= K:
                     continue
-                delta = float(tier_cost[u, k + 1]) - float(alloc[u])
+                delta = tc[u][k + 1] - give[u]
                 if 0 < delta <= remaining + 1e-9:
-                    alloc[u] = tier_cost[u, k + 1]
+                    give[u] = tc[u][k + 1]
                     tier_of[u] = k + 1
                     remaining -= delta
                     changed = True
@@ -168,8 +368,9 @@ def distribute_budget(
                     tier_of[u] = k + 1
                     changed = True
 
+    tasks = wf.tasks
     for pos, tid in enumerate(order):
-        wf.tasks[tid].budget = float(alloc[pos])
+        tasks[tid].budget = give[pos]
     return max(remaining, 0.0)
 
 
@@ -188,17 +389,32 @@ def update_budget(
     unscheduled tasks, so uncertainty never propagates into a violation.
     The undistributed remainder of the redistribution persists as the spare
     (conservation: money is never created or silently dropped).
+
+    ``unscheduled`` may come in any order (the engine hands over its raw
+    set): the rank order of the estimated execution sequence S — which
+    the redistribution consumes anyway — is the one deterministic order
+    used for both the pool summation and the distribution, computed once.
     """
-    t_f = wf.tasks[finished_tid]
-    pool = sum(wf.tasks[tid].budget for tid in unscheduled)
+    tasks = wf.tasks
+    t_f = tasks[finished_tid]
+    if unscheduled:
+        ranks = wf.rank_cache
+        if ranks is None:
+            wf.rank_cache = ranks = [t.rank for t in tasks]
+        order = sorted(unscheduled, key=ranks.__getitem__)
+        pool = sum([tasks[tid].budget for tid in order])
+    else:
+        order = None
+        pool = 0.0
     headroom = t_f.budget + spare_budget
     if actual_cost <= headroom:
         pool += headroom - actual_cost
     else:
         pool -= actual_cost - headroom
     pool = max(pool, 0.0)
-    if unscheduled:
-        return distribute_budget(cfg, wf, pool, task_ids=list(unscheduled))
+    if order:
+        return distribute_budget(cfg, wf, pool, task_ids=order,
+                                 presorted=True)
     return pool
 
 

@@ -53,6 +53,17 @@ class CostTable:
     est_full_cost: np.ndarray  # [T, V] f64 — Eq. (5) max: prov + cont + PT
     cost_bare: np.ndarray      # [T, V] f64 — PT only (no prov, no cont)
     by_speed: np.ndarray       # [V] i64 — type indices, ascending mips
+    tier_cost: np.ndarray      # [T, V] f64 — est_full_cost in by_speed order
+    # Plain-Python mirrors (``tolist`` is value-preserving) for the
+    # small-subset Algorithm 1/3 and scalar-select fast paths, where
+    # per-call numpy dispatch overhead dwarfs the arithmetic.
+    cheap_list: list           # [T] — est_full_cost[:, 0] as floats
+    tier_list: list            # [T][V] — tier_cost rows as float lists
+    rt_list: list              # [T][V] — rt_out_ms rows as int lists
+    top_list: list             # [T] — tier_cost[:, -1] (fastest tier)
+    # True ⇔ every tier_cost row is nondecreasing in speed order — the
+    # precondition for the budget sweep's "everyone tops out" shortcut.
+    tiers_monotone: bool
 
     @property
     def n_tasks(self) -> int:
@@ -105,14 +116,25 @@ def build_table(cfg: PlatformConfig, wf: Workflow) -> CostTable:
 
     prov = cfg.vm_provision_delay_ms
     cont = cfg.container_provision_ms
+    est_full = billed(proc_ms + prov + cont)
+    by_speed = np.argsort(mips, kind="stable").astype(np.int64)
+    # Pre-gathered [T, K] slice the SFTD sweep reads row-wise: one
+    # fancy-index per redistribution call instead of a 2-D gather.
+    tier_cost = np.ascontiguousarray(est_full[:, by_speed])
     return CostTable(
         cfg=cfg,
         in_mb=in_mb,
         proc_ms=proc_ms,
         rt_out_ms=rt_out_ms,
-        est_full_cost=billed(proc_ms + prov + cont),
+        est_full_cost=est_full,
         cost_bare=billed(proc_ms),
-        by_speed=np.argsort(mips, kind="stable").astype(np.int64),
+        by_speed=by_speed,
+        tier_cost=tier_cost,
+        cheap_list=est_full[:, 0].tolist(),
+        tier_list=tier_cost.tolist(),
+        rt_list=rt_out_ms.tolist(),
+        top_list=tier_cost[:, -1].tolist(),
+        tiers_monotone=bool((np.diff(tier_cost, axis=1) >= 0).all()),
     )
 
 

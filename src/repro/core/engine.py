@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math as _math
 import time as _time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -51,7 +52,7 @@ AUCTION_MIN_PAIRS = 8192
 CycleMeta = Tuple[int, int, List[Tuple[DataKey, float]]]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _WfState:
     wf: Workflow
     spare: float = 0.0
@@ -62,7 +63,7 @@ class _WfState:
     pending_parents: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Running:
     wid: int
     tid: int
@@ -118,9 +119,15 @@ class SimState:
         self.container_cold = 0
         total_tasks = sum(w.n_tasks for w in self.workflows)
         # Global per-task degradation tables, indexed by task global id.
-        self.cpu_deg, self.bw_in_deg, self.bw_out_deg = degradation_tables(
+        # Kept as plain-float lists: the pipeline math runs per dispatch
+        # and numpy scalar arithmetic is several times slower than float
+        # (values identical — tolist is value-preserving).
+        cpu_deg, bw_in_deg, bw_out_deg = degradation_tables(
             cfg, total_tasks, seed
         )
+        self.cpu_deg = cpu_deg.tolist()
+        self.bw_in_deg = bw_in_deg.tolist()
+        self.bw_out_deg = bw_out_deg.tolist()
         self._task_base: Dict[int, int] = {}
         base = 0
         for w in self.workflows:
@@ -186,13 +193,21 @@ class SimState:
             heapq.heappush(self.queue, (self.now, wid, tid))
 
     def _inputs_of(self, wf: Workflow, task: Task) -> List[Tuple[DataKey, float]]:
-        ins: List[Tuple[DataKey, float]] = []
+        # Static per task (DAG and sizes are immutable once built) and
+        # read at least twice per task (selection + pipeline start):
+        # memoized on the Task (clones share the list — same wid, same
+        # DAG by construction).
+        ins = task.inputs_cache
+        if ins is not None:
+            return ins
+        ins = []
         if task.ext_in_mb > 0:
             ins.append((("ext", wf.wid, task.tid), task.ext_in_mb))
         for name, mb in task.shared_in:   # cross-tenant shared data
             ins.append((("shared", name, 0), mb))
         for p in task.parents:
             ins.append((("out", wf.wid, p), wf.tasks[p].out_mb))
+        task.inputs_cache = ins
         return ins
 
     def _handle_finish(self, wid: int, tid: int) -> None:
@@ -216,7 +231,7 @@ class SimState:
             st.spare += task.budget - actual
         else:
             st.spare = budget_mod.update_budget(
-                self.cfg, wf, tid, actual, st.spare, sorted(st.unscheduled)
+                self.cfg, wf, tid, actual, st.spare, st.unscheduled
             )
         # Release ready children.
         for c in task.children:
@@ -283,6 +298,7 @@ class SimState:
                 budget_eff,
                 idle,
                 table=cost_tables.table_for(self.cfg, wf),
+                pool=self.pool,
             )
             if self.policy.budget_mode == "mslbl":
                 # Spare consumed by how much the estimate exceeds the base.
@@ -306,15 +322,17 @@ class SimState:
                      placement.vm.vmid if placement.vm else -1)
                 )
 
-    def drain_queue_for_cycle(self) -> Tuple[list, List[CycleMeta]]:
+    def drain_queue_for_cycle(self) -> Tuple[list, List[CycleMeta], list]:
         """Pop the whole ready queue in heap order; returns the
-        (task, app, owner_tag, inputs) rows the auction scores plus the
-        (wid, tid, inputs) metadata the commit step needs."""
+        (task, app, owner_tag, inputs) rows the auction scores, the
+        (wid, tid, inputs) metadata the commit step needs, and the
+        per-task cost tables the auction's serial resolution reads."""
         ordered = []
         while self.queue:
             ordered.append(heapq.heappop(self.queue))
         tasks = []
         metas: List[CycleMeta] = []
+        tables = []
         for est, wid, tid in ordered:
             st = self.wf_state[wid]
             task = st.wf.tasks[tid]
@@ -322,7 +340,8 @@ class SimState:
             inputs = self._inputs_of(st.wf, task)
             tasks.append((task, st.wf.app, tag, inputs))
             metas.append((wid, tid, inputs))
-        return tasks, metas
+            tables.append(cost_tables.table_for(self.cfg, st.wf))
+        return tasks, metas, tables
 
     def apply_cycle_placements(
         self,
@@ -343,7 +362,8 @@ class SimState:
                         and vm.status == VM_IDLE]
                 p = select(self.cfg, self.policy, task, wid, st.wf.app,
                            inputs, task.budget, pool,
-                           table=cost_tables.table_for(self.cfg, st.wf))
+                           table=cost_tables.table_for(self.cfg, st.wf),
+                           pool=self.pool)
             st.unscheduled.discard(tid)
             if p.vm is not None:
                 vm = p.vm
@@ -381,27 +401,57 @@ class SimState:
             else:
                 self.container_cold += 1
         c_ms = self.pool.activate_container(vm, wf.app, self.policy.use_containers)
-        # 2. input staging: only cache-missing bytes travel.
+        # 2. input staging: only cache-missing bytes travel.  One pass
+        # computes the missing volume and collects the keys to cache
+        # (cache_put is a no-op for already-cached keys, so putting only
+        # the misses is equivalent).
         inputs = self._inputs_of(wf, task)
-        missing = vm.missing_mb(inputs)
-        total_mb = sum(mb for _, mb in inputs)
+        dc = vm.data_cache
+        missing = 0.0
+        total_mb = 0.0
+        to_cache = []
+        for item in inputs:
+            mb = item[1]
+            total_mb += mb
+            if item[0] not in dc:
+                missing += mb
+                to_cache.append(item)
         self.data_mb_total += total_mb
         self.data_mb_hit += total_mb - missing
-        in_ms = costs.transfer_in_ms(self.cfg, vm.vmt, missing, self.bw_in_deg[gid])
-        for key, mb in inputs:
+        for key, mb in to_cache:
             vm.cache_put(self.cfg, key, mb, self.pool.data_index)
         # 3. compute (degraded CPU), 4. write-back to global storage.
-        rt_ms = costs.runtime_ms(vm.vmt, task.size_mi, self.cpu_deg[gid])
-        out_ms = costs.transfer_out_ms(
-            self.cfg, vm.vmt, task.out_mb, self.bw_out_deg[gid]
-        )
+        # Eqs. (1)-(3) inlined from core.costs (same float64 op sequence,
+        # same tolerance-ceil) — three function hops per task dispatch
+        # add up over six-figure task counts.
+        cfg = self.cfg
+        vmt = vm.vmt
+        ceil = _math.ceil
+        tol = 1.0 - costs.CEIL_TOL
+        if missing > 0.0:
+            bw = vmt.bandwidth_mbps * (1.0 - self.bw_in_deg[gid])
+            in_ms = int(ceil(
+                1000.0 * (missing / bw + missing / cfg.gs_read_mbps) * tol))
+        else:
+            in_ms = 0
+        rt_ms = int(ceil(
+            1000.0 * task.size_mi / (vmt.mips * (1.0 - self.cpu_deg[gid]))
+            * tol))
+        if task.out_mb > 0.0:
+            bw = vmt.bandwidth_mbps * (1.0 - self.bw_out_deg[gid])
+            out_ms = int(ceil(
+                1000.0 * (task.out_mb / bw + task.out_mb / cfg.gs_write_mbps)
+                * tol))
+        else:
+            out_ms = 0
         pipe_ms = c_ms + in_ms + rt_ms + out_ms
         finish = self.now + pipe_ms
         vm.busy_ms += pipe_ms
         billed = pipe_ms + (
-            self.cfg.vm_provision_delay_ms if triggered_provision else 0
+            cfg.vm_provision_delay_ms if triggered_provision else 0
         )
-        actual_cost = costs.billed_cost(self.cfg, vm.vmt, billed)
+        bp = cfg.billing_period_ms
+        actual_cost = ((billed + bp - 1) // bp) * vmt.cost_per_bp
         run = _Running(wid, tid, vm, triggered_provision, actual_cost)
         self.running[(wid, tid)] = run
         self._push(finish, FINISH, (wid, tid))
@@ -490,9 +540,9 @@ class SimEngine(SimState):
         budgets are sufficient (see jax_cycles docstring)."""
         from .jax_cycles import batched_cycle
 
-        tasks, metas = self.drain_queue_for_cycle()
+        tasks, metas, tables = self.drain_queue_for_cycle()
         placements = batched_cycle(self.cfg, self.policy, tasks, idle,
-                                   self.pool)
+                                   self.pool, tables=tables)
         self.apply_cycle_placements(metas, placements, idle)
 
 

@@ -126,6 +126,13 @@ def build_pair_arrays(cfg: PlatformConfig, policy: Policy,
     return (size, out_mb, budget, missing, cont, tier, mips, bw, price)
 
 
+# Below this remaining queue×pool pair product a request finishes its
+# auction serially instead of riding further kernel rounds — the commit
+# rule's conflict tails otherwise pay per-round device dispatch for a
+# handful of pairs.  Serial and kernel resolution are bit-exact.
+AUCTION_TAIL_PAIRS = 192
+
+
 def _p2(n: int) -> int:
     """Next power of two ≥ max(n, 2) — shape buckets so the jitted kernel
     is reused across cycles instead of recompiling per shape (padding
@@ -134,46 +141,47 @@ def _p2(n: int) -> int:
 
 
 class _RoundBuffers:
-    """Resident padded pair buffers for auction rounds.
+    """Resident padded pair buffers for auction rounds, bucketed by
+    power-of-two ``(Bp, Tp, Vp)`` shape.
 
-    One ``(Bp, Tp, Vp)`` bucket's arrays stay allocated across rounds,
-    cycles and simulations; a round resets them (cheap memsets to the
-    inert padding values) and each active member writes its rows in
-    place.  This replaces the per-round pad-and-stack allocation storm
-    the vmapped kernel call used to pay.
+    The old cache held exactly ONE bucket: mixed-size rounds (a big
+    round followed by small ones, the normal shape of the aggregate
+    dispatcher) thrashed it — every bucket flip reallocated and refilled
+    nine arrays, and the jitted kernel re-traced.  Now:
+
+    * multiple buckets stay resident (dict, LRU-evicted once the summed
+      ``B·T·V`` exceeds ``MAX_RESIDENT_ELEMS``), each traced once;
+    * a round reuses the smallest resident bucket that covers its shape
+      (up to ``COVER_SLACK``× element blowup — padding is inert, and
+      riding a slightly-larger resident bucket beats allocating and
+      tracing a new one), growing buckets geometrically via the
+      power-of-two dims;
+    * resets clear only the region the bucket's previous round actually
+      wrote (tracked per bucket), not the whole allocation — small
+      rounds in a big bucket pay memsets proportional to their own size.
 
     The cache is thread-local (each thread driving engines gets its own
     buffers — rounds from concurrent runs never interleave on shared
-    arrays) and only buckets up to ``MAX_RESIDENT_ELEMS`` pair elements
-    stay resident; paper-scale outliers allocate fresh per round rather
-    than pinning hundreds of MB at module scope.
+    arrays); over-cap outliers allocate fresh per round rather than
+    pinning hundreds of MB at module scope.
     """
 
-    __slots__ = ("key", "bufs")
+    __slots__ = ("buckets", "used", "lru")
 
-    # Largest B·T·V bucket kept alive between rounds (~4M pair elements
+    # Largest summed B·T·V kept alive between rounds (~4M pair elements
     # ⇒ ≲50 MB across the six [B,T,V] arrays).
     MAX_RESIDENT_ELEMS = 1 << 22
+    # Max element blowup tolerated when riding a larger resident bucket.
+    COVER_SLACK = 4
 
     def __init__(self):
-        self.key = None
-        self.bufs = None
+        self.buckets = {}   # (Bp, Tp, Vp) -> bufs tuple
+        self.used = {}      # (Bp, Tp, Vp) -> (B, T, V) region to reset
+        self.lru = []       # keys, most-recently-used last
 
-    def get(self, Bp: int, Tp: int, Vp: int):
-        if self.key == (Bp, Tp, Vp):
-            size, out_mb, budget, missing, cont, tier, mips, bw, price = \
-                self.bufs
-            size.fill(0.0)
-            out_mb.fill(0.0)
-            budget.fill(-1.0)
-            missing.fill(0.0)
-            cont.fill(0.0)
-            tier.fill(0)
-            mips.fill(1.0)
-            bw.fill(1.0)
-            price.fill(1.0)
-            return self.bufs
-        bufs = (
+    @staticmethod
+    def _alloc(Bp: int, Tp: int, Vp: int):
+        return (
             np.zeros((Bp, Tp), np.float32),        # size
             np.zeros((Bp, Tp), np.float32),        # out_mb
             np.full((Bp, Tp), -1.0, np.float32),   # budget (inert: -1)
@@ -184,9 +192,62 @@ class _RoundBuffers:
             np.ones((Bp, Vp), np.float32),         # bw
             np.ones((Bp, Vp), np.float32),         # price
         )
-        if Bp * Tp * Vp <= self.MAX_RESIDENT_ELEMS:
-            self.key, self.bufs = (Bp, Tp, Vp), bufs
-        # else: one-shot buffers — leave any cached smaller bucket intact.
+
+    @staticmethod
+    def _reset(bufs, region) -> None:
+        B, T, V = region
+        if B == 0:
+            return
+        size, out_mb, budget, missing, cont, tier, mips, bw, price = bufs
+        size[:B, :T] = 0.0
+        out_mb[:B, :T] = 0.0
+        budget[:B, :T] = -1.0
+        missing[:B, :T, :V] = 0.0
+        cont[:B, :T, :V] = 0.0
+        tier[:B, :T, :V] = 0
+        mips[:B, :V] = 1.0
+        bw[:B, :V] = 1.0
+        price[:B, :V] = 1.0
+
+    def _touch(self, key) -> None:
+        if self.lru and self.lru[-1] == key:
+            return
+        try:
+            self.lru.remove(key)
+        except ValueError:
+            pass
+        self.lru.append(key)
+
+    def get(self, Bp: int, Tp: int, Vp: int):
+        req = Bp * Tp * Vp
+        best = None
+        for key in self.buckets:
+            if key[0] >= Bp and key[1] >= Tp and key[2] >= Vp:
+                if best is None or (key[0] * key[1] * key[2]
+                                    < best[0] * best[1] * best[2]):
+                    best = key
+        if best is not None \
+                and best[0] * best[1] * best[2] <= self.COVER_SLACK * req:
+            bufs = self.buckets[best]
+            self._reset(bufs, self.used[best])
+            # Upper bound of what this round may write (propose_into
+            # writes member rows within the requested dims only).
+            self.used[best] = (Bp, Tp, Vp)
+            self._touch(best)
+            return bufs
+        bufs = self._alloc(Bp, Tp, Vp)
+        if req <= self.MAX_RESIDENT_ELEMS:
+            key = (Bp, Tp, Vp)
+            self.buckets[key] = bufs
+            self.used[key] = (Bp, Tp, Vp)
+            self._touch(key)
+            total = sum(k[0] * k[1] * k[2] for k in self.buckets)
+            while total > self.MAX_RESIDENT_ELEMS and len(self.lru) > 1:
+                old = self.lru.pop(0)
+                total -= old[0] * old[1] * old[2]
+                del self.buckets[old]
+                del self.used[old]
+        # else: one-shot buffers — leave resident buckets intact.
         return bufs
 
 
@@ -207,9 +268,12 @@ class CycleRequest:
     """
 
     def __init__(self, cfg: PlatformConfig, policy: Policy,
-                 tasks, vms: Sequence[VM], pool: VMPool):
+                 tasks, vms: Sequence[VM], pool: VMPool,
+                 tables: Optional[Sequence] = None):
         self.cfg = cfg
         self.policy = policy
+        self.pool = pool
+        self.tables = tables   # per-task CostTables for serial resolution
         self.tasks = list(tasks)
         self.vms = list(vms)
         T, V = len(tasks), len(vms)
@@ -245,17 +309,31 @@ class CycleRequest:
         bw[b, :V] = self.bw
         price[b, :V] = self.price
 
-    def _resolve_infeasible(self, ti: int) -> Placement:
-        """Sequential tier-4/5 resolution for a task the kernel found no
-        in-budget VM for, evaluated against the auction's *current*
-        availability set — the same ``select`` call, at the same point in
-        the serial order, the sequential reference makes.  Insufficient-
-        budget cycles therefore produce the reference interleaving even
-        when the tier-5 rule reuses (and thereby consumes) an idle VM."""
+    def _select_serial(self, ti: int) -> Placement:
+        """The per-task reference rule for task ``ti`` against the
+        auction's *current* availability set — the same ``select`` call,
+        at the same point in the serial order, the sequential reference
+        makes.  Used both for kernel-infeasible rows (insufficient-budget
+        tier-4/5 resolution) and for the serial tail drain."""
         task, app, tag, inputs = self.tasks[ti]
-        pool = [vm for j, vm in enumerate(self.vms) if self.avail[j]]
+        avail = [vm for j, vm in enumerate(self.vms) if self.avail[j]]
         return select(self.cfg, self.policy, task, -1, app, inputs,
-                      task.budget, pool, owner_tag=tag)
+                      task.budget, avail, owner_tag=tag, pool=self.pool,
+                      table=self.tables[ti] if self.tables else None)
+
+    def finish_serial(self) -> None:
+        """Drain every remaining unplaced task with the per-task
+        reference rule, in queue order, against the live availability
+        set.  The auction's fixed point *is* sequential per-task
+        processing (the property the whole module rests on), so the tail
+        is bit-exact either way — and a few Python selects beat a long
+        conflict tail of near-empty kernel rounds."""
+        for ti in self.unplaced:
+            p = self._select_serial(ti)
+            self.placements[ti] = p
+            if p.vm is not None:
+                self.avail[self.col[p.vm.vmid]] = False
+        self.unplaced = []
 
     def commit(self, best, tiers, fins, costs_) -> None:
         """Serial-dictatorship prefix commit: the winner of each VM is its
@@ -265,7 +343,7 @@ class CycleRequest:
         the sequential reference produces.
 
         Tasks with no feasible VM (best < 0) resolve *in serial position*
-        through :meth:`_resolve_infeasible` — the insufficient-budget
+        through :meth:`_select_serial` — the insufficient-budget
         tier-5 rule may take an idle VM, in which case every later task
         this round is deferred (``halted``) and re-auctions against the
         shrunken pool, exactly as the sequential reference would see it."""
@@ -286,7 +364,7 @@ class CycleRequest:
                 next_unplaced.append(ti)
                 continue
             if j < 0:
-                p = self._resolve_infeasible(ti)
+                p = self._select_serial(ti)
                 self.placements[ti] = p
                 committed = True
                 if p.vm is not None:
@@ -308,7 +386,7 @@ class CycleRequest:
 
 
 def multi_cycle(cfg: PlatformConfig, requests: Sequence[CycleRequest],
-                use_pallas: bool = False
+                use_pallas: object = "auto"
                 ) -> List[List[Optional[Placement]]]:
     """Run every request's auction to its fixed point, scoring all active
     members' rounds with ONE batched kernel call per round.
@@ -317,10 +395,28 @@ def multi_cycle(cfg: PlatformConfig, requests: Sequence[CycleRequest],
     member drops out as soon as it has no unplaced task, no available VM,
     or a round commits nothing.  Rounds fill the resident power-of-two
     ``(B, T, V)`` buffers (``_RoundBuffers``) so the vmapped kernel
-    recompiles per bucket, not per round, and allocates nothing per call.
+    recompiles per bucket, not per round, and allocates nothing per call;
+    on accelerators the staged device copies are donated back to XLA.
+
+    Requests whose remaining task×VM pair product drops below
+    ``AUCTION_TAIL_PAIRS`` leave the fixed point and drain serially
+    (:meth:`CycleRequest.finish_serial`, bit-exact): conflict tails
+    otherwise stretch into dozens of near-empty kernel rounds whose
+    dispatch overhead dwarfs the scoring they do.
+
+    ``use_pallas``: False / True / "auto" (Pallas on TPU, jnp elsewhere).
     """
+    pallas = aff_ops.resolve_use_pallas(use_pallas)
+    donate = aff_ops.donation_supported()
     while True:
-        active = [r for r in requests if r.active]
+        active = []
+        for r in requests:
+            if not r.active:
+                continue
+            if len(r.unplaced) * int(r.avail.sum()) < AUCTION_TAIL_PAIRS:
+                r.finish_serial()
+            else:
+                active.append(r)
         if not active:
             break
         Tp = max(_p2(len(r.unplaced)) for r in active)
@@ -334,7 +430,8 @@ def multi_cycle(cfg: PlatformConfig, requests: Sequence[CycleRequest],
         res = aff_ops.affinity_batch(
             *bufs,
             gs_read=cfg.gs_read_mbps, gs_write=cfg.gs_write_mbps,
-            bp_ms=float(cfg.billing_period_ms), use_pallas=use_pallas)
+            bp_ms=float(cfg.billing_period_ms), use_pallas=pallas,
+            donate=donate)
         best = np.asarray(res.best_vm)
         tiers = np.asarray(res.best_tier)
         fins = np.asarray(res.est_finish)
@@ -346,7 +443,7 @@ def multi_cycle(cfg: PlatformConfig, requests: Sequence[CycleRequest],
 
 def batched_cycle(cfg: PlatformConfig, policy: Policy,
                   tasks, vms: Sequence[VM], pool: VMPool,
-                  use_pallas: bool = False
+                  use_pallas: object = "auto", tables=None
                   ) -> List[Optional[Placement]]:
     """Returns, per task (queue order), a reuse Placement or None (task
     needs the provisioning fallback)."""
@@ -354,5 +451,5 @@ def batched_cycle(cfg: PlatformConfig, policy: Policy,
         return []
     if not vms:
         return [None] * len(tasks)
-    req = CycleRequest(cfg, policy, tasks, vms, pool)
+    req = CycleRequest(cfg, policy, tasks, vms, pool, tables=tables)
     return multi_cycle(cfg, [req], use_pallas=use_pallas)[0]

@@ -15,20 +15,25 @@ that **rendezvous at auction points**:
 
 1. each member runs uninterrupted — full cache locality, zero
    per-timestamp lockstep overhead — until its next scheduling cycle
-   that wants the auction (``CycleRequest``) or until it completes;
-2. every parked member's request is auctioned together: each auction
-   round stacks all pair arrays into one resident ``[B, T, V]`` buffer
-   and scores it with a single ``jax.vmap``'d affinity kernel call
+   with queued tasks (EBPSM family) or until it completes;
+2. the driver decides **per rendezvous round, on aggregate size**: when
+   the summed queue × pool pair count of every parked member clears
+   ``AUCTION_MIN_PAIRS_ROUND``, all parked cycles are auctioned together
+   — pair arrays stack into one resident ``[B, T, V]`` buffer scored by
+   a single ``jax.vmap``'d affinity kernel call
    (``kernels.affinity.ops.affinity_batch``, ``core.jax_cycles``);
+   below the threshold each parked cycle runs the per-task reference
+   path instead (bit-exact either way);
 3. placements commit through the shared ``apply_cycle_placements`` and
-   each member resumes toward its next auction point.
+   each member resumes toward its next cycle.
 
 Members are independent simulations, so the interleaving is free to
 choose; rendezvous maximizes sharing (every batched kernel call carries
-*all* members with a pending auction, not just the ones whose event
-timestamps happened to coincide) while members that never auction —
-below-threshold cycles, MSLBL — run start-to-finish in one slice,
-exactly like the sequential reference.
+*all* members with a pending cycle, not just the ones whose event
+timestamps happened to coincide — dozens of individually small cycles
+batch into one device call) while members that never park — MSLBL, or
+``batched=False`` — run start-to-finish in one slice, exactly like the
+sequential reference.
 
 Because the transition semantics are shared code and the auction is the
 property-tested ``jax_cycles`` fixed point, results are bit-exact with
@@ -58,15 +63,23 @@ from .types import PlatformConfig, SimResult, Workflow, clone_workload
 # One grid member: (policy, workflows, degradation seed).
 GridMember = Tuple[Policy, Sequence[Workflow], int]
 
-# Auction engagement threshold (queue × pool pairs) for grid members.
-# Lower than the solo SimEngine's core.engine.AUCTION_MIN_PAIRS: a grid
-# round amortizes the device call across every parked member, and the
-# auction now replicates the insufficient-budget tier-5 interleaving
-# (core.jax_cycles), so mid-size cycles can ride affinity_batch safely.
+# Legacy per-member auction threshold (queue × pool pairs), kept for the
+# ``batched="member"`` compatibility mode the grid-wall benchmark uses as
+# its measured baseline.  The default dispatcher decides on *aggregate*
+# round size instead (below).
 AUCTION_MIN_PAIRS_GRID = 2048
 
-# What a member yields when it parks at an auction point.
-_AuctionPoint = Tuple[SimState, list, list, CycleRequest]
+# Aggregate-round auction threshold: at each rendezvous the driver sums
+# every parked member's queue × pool pair product and rides one batched
+# ``multi_cycle`` whenever the round total clears this.  Much lower than
+# the per-member threshold — one resident [B, T, V] kernel call amortizes
+# across all parked members, so dozens of small cycles that individually
+# never justified a device call now batch into one.
+AUCTION_MIN_PAIRS_ROUND = 1536
+
+# What a member yields when it parks at a pending scheduling cycle:
+# (state, idle snapshot).  The driver decides serial vs batched.
+_CyclePoint = Tuple[SimState, list]
 
 
 class BatchSimEngine:
@@ -77,15 +90,28 @@ class BatchSimEngine:
         cfg: PlatformConfig,
         members: Sequence[GridMember],
         trace: bool = False,
-        use_pallas: bool = False,
+        use_pallas: object = "auto",
         batched: object = "auto",
         predistributed: Optional[Sequence[Optional[Dict[int, float]]]] = None,
     ):
-        """``batched``: True / False / "auto" — "auto" routes a member's
-        cycle through the auction only when its queue×pool product
-        reaches ``AUCTION_MIN_PAIRS_GRID`` (tiny cycles keep the cheap
-        per-task path; outcomes are bit-exact with ``SimEngine`` on
-        either path, including insufficient-budget tier-5 cycles).
+        """``batched``: False / True / "auto" / "member".
+
+        * ``"auto"`` (default) — the aggregate-round dispatcher: members
+          park at every EBPSM scheduling cycle; a rendezvous round rides
+          the batched auction when the summed queue×pool pairs of all
+          parked members reach ``AUCTION_MIN_PAIRS_ROUND``, else each
+          parked cycle runs the per-task reference path.
+        * ``True`` — every parked round is auctioned; ``False`` — members
+          never park (pure sequential reference, one slice per member).
+        * ``"member"`` — the pre-aggregate per-member rule (pairs ≥
+          ``AUCTION_MIN_PAIRS_GRID``), kept as the benchmark baseline.
+
+        Outcomes are bit-exact with ``SimEngine`` on every path,
+        including insufficient-budget tier-5 cycles.
+
+        ``use_pallas``: False / True / "auto" — "auto" engages the Pallas
+        affinity kernel when the default JAX backend is TPU and falls
+        back to the jnp oracle elsewhere (both parity-gated).
 
         ``predistributed``: optional per-member wid → spare maps for
         workloads whose arrival-time budget distribution already ran (see
@@ -101,35 +127,44 @@ class BatchSimEngine:
         ]
         self.rounds = 0
         self.batched_calls = 0
+        self.batched_cycles = 0     # member-cycles scored by the kernel
+        self.serial_cycles = 0      # parked member-cycles run per-task
+        self.round_pairs: List[int] = []          # aggregate pairs / round
+        self.batched_member_pairs: List[int] = []  # per-member pairs when batched
         self.wall_s = 0.0  # whole-grid wall clock of the last run()
 
-    def _wants_auction(self, st: SimState, n_idle: int) -> bool:
-        """EBPSM-family cycles go through the auction; MSLBL mutates spare
-        budget mid-cycle and keeps the per-task reference path."""
-        if st.policy.budget_mode != "ebpsm" or not st.queue:
-            return False
-        if self.batched is True:
-            return True
-        if self.batched == "auto":
-            return len(st.queue) * n_idle >= AUCTION_MIN_PAIRS_GRID
-        return False
-
-    def _member_steps(self, st: SimState) -> Iterator[_AuctionPoint]:
-        """Run one member until its next auction point (yield) or until it
-        completes.  The driver commits the auction's placements before
-        resuming, so from the member's view the decision stream is
-        identical to ``SimEngine``'s."""
+    def _member_steps(self, st: SimState) -> Iterator[_CyclePoint]:
+        """Run one member until its next pending scheduling cycle (yield)
+        or until it completes.  EBPSM-family members park at *every*
+        cycle with queued tasks — the driver owns the serial-vs-batched
+        decision per rendezvous round; MSLBL mutates spare budget
+        mid-cycle and runs the per-task reference path in its own slice,
+        exactly like ``SimEngine``."""
+        park = self.batched is not False \
+            and st.policy.budget_mode == "ebpsm"
         while not st.done:
             if not st.advance():
                 continue
             idle = st.pool.idle_vms()
-            if self._wants_auction(st, len(idle)):
-                tasks, metas = st.drain_queue_for_cycle()
-                yield st, metas, idle, CycleRequest(
-                    self.cfg, st.policy, tasks, idle, st.pool)
+            if park and st.queue:
+                yield st, idle
             else:
                 st.sequential_cycle(idle)
                 st.post_cycle()
+
+    def _round_rides_kernel(self, points: List[_CyclePoint],
+                            pairs: List[int]) -> List[bool]:
+        """The dispatcher: which parked cycles of this round are auctioned.
+        Zero-pair cycles (no idle VMs — pure provisioning fallback) never
+        ride: the kernel has nothing to score for them."""
+        self.round_pairs.append(sum(pairs))
+        if self.batched is True:
+            return [p > 0 for p in pairs]
+        if self.batched == "member":
+            return [p >= AUCTION_MIN_PAIRS_GRID for p in pairs]
+        # "auto": one aggregate decision for the whole rendezvous round.
+        ride = sum(pairs) >= AUCTION_MIN_PAIRS_ROUND
+        return [ride and p > 0 for p in pairs]
 
     def run(self) -> List[SimResult]:
         t0 = _time.time()
@@ -138,31 +173,67 @@ class BatchSimEngine:
         live = [self._member_steps(st) for st in self.states]
         while live:
             self.rounds += 1
-            owners: List[Tuple[SimState, list, list]] = []
-            requests: List[CycleRequest] = []
-            parked: List[Iterator[_AuctionPoint]] = []
+            points: List[_CyclePoint] = []
+            parked: List[Iterator[_CyclePoint]] = []
             for stepper in live:
                 point = next(stepper, None)
                 if point is None:
                     continue  # member ran to completion
-                st, metas, idle, req = point
-                owners.append((st, metas, idle))
-                requests.append(req)
+                points.append(point)
                 parked.append(stepper)
-            if not requests:
+            if not points:
                 break
-            self.batched_calls += 1
-            all_placements = multi_cycle(self.cfg, requests,
-                                         use_pallas=self.use_pallas)
-            for (st, metas, idle), placements in zip(owners, all_placements):
-                st.apply_cycle_placements(metas, placements, idle)
-                st.post_cycle()
+            owners: List[Tuple[SimState, list, list]] = []
+            requests: List[CycleRequest] = []
+            pairs = [len(st.queue) * len(idle) for st, idle in points]
+            for (st, idle), p, ride in zip(points, pairs,
+                                           self._round_rides_kernel(points,
+                                                                    pairs)):
+                if ride:
+                    self.batched_cycles += 1
+                    self.batched_member_pairs.append(p)
+                    tasks, metas, tables = st.drain_queue_for_cycle()
+                    owners.append((st, metas, idle))
+                    requests.append(CycleRequest(
+                        self.cfg, st.policy, tasks, idle, st.pool,
+                        tables=tables))
+                else:
+                    self.serial_cycles += 1
+                    st.sequential_cycle(idle)
+                    st.post_cycle()
+            if requests:
+                self.batched_calls += 1
+                all_placements = multi_cycle(self.cfg, requests,
+                                             use_pallas=self.use_pallas)
+                for (st, metas, idle), placements in zip(owners,
+                                                         all_placements):
+                    st.apply_cycle_placements(metas, placements, idle)
+                    st.post_cycle()
             live = parked
         self.wall_s = _time.time() - t0
         # Per-member wall is the amortized share of the grid run (they sum
         # to the total); the whole-grid wall lives on the engine/BatchResult.
         share = self.wall_s / len(self.states) if self.states else 0.0
         return [st.finalize(wall_s=share) for st in self.states]
+
+    def dispatch_stats(self) -> Dict[str, object]:
+        """Aggregate-auction observability for benchmarks and reports."""
+        hist: Dict[str, int] = {}
+        for p in self.round_pairs:
+            b = 1 << max(int(p) - 1, 0).bit_length() if p else 0
+            key = str(b)
+            hist[key] = hist.get(key, 0) + 1
+        return {
+            "rounds": self.rounds,
+            "batched_calls": self.batched_calls,
+            "batched_cycles": self.batched_cycles,
+            "serial_cycles": self.serial_cycles,
+            "aggregate_pairs_hist": hist,
+            "max_member_pairs_batched": max(self.batched_member_pairs,
+                                            default=0),
+            "min_member_pairs_batched": min(self.batched_member_pairs,
+                                            default=0),
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +307,7 @@ def simulate_batch(
     workloads: Union[Sequence[Workflow], Sequence[Sequence[Workflow]]],
     seed: Union[int, Sequence[int]] = 0,
     trace: bool = False,
-    use_pallas: bool = False,
+    use_pallas: object = "auto",
     batched: object = "auto",
 ) -> BatchResult:
     """Evaluate the full grid policies × workloads × seeds in one batched

@@ -82,6 +82,16 @@ class CellMetrics:
         d["tier_hist"] = {str(k): v for k, v in self.tier_hist.items()}
         return d
 
+    @classmethod
+    def from_dict(cls, d: Dict) -> "CellMetrics":
+        """Inverse of :meth:`to_dict` (ignores extra keys — artifact rows
+        carry cell coordinates alongside the metrics)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in names}
+        kw["tier_hist"] = {int(k): v
+                           for k, v in d.get("tier_hist", {}).items()}
+        return cls(**kw)
+
 
 def format_row(m: CellMetrics) -> str:
     """One-line human-readable summary (examples / REPL use)."""

@@ -14,6 +14,14 @@ mode) — collects one :class:`repro.exp.metrics.CellMetrics` per
 * ``<out>/paper_grid.md`` — a human-readable report (summary table +
   per-cell makespans).
 
+Workload cells are independent simulations, so the grid scales across
+processes: ``--workers N`` fans cell batches out to a spawn-based
+process pool.  Row order and every per-cell metric are identical to a
+serial run; the merged dispatch stats (rounds, batched calls) reflect
+the worker chunking, which re-batches cells for load balance, so they
+can differ from a serial run's batching.  The full ``paper`` grid
+(180 workload cells × 5 policies × 3 seeds) is the intended consumer.
+
 ``--check-floors`` turns the run into a gate: non-zero exit when any
 EBPSM cell's budget-met % drops below the scenario's recorded floor, or
 when EBPSM stops beating MSLBL_MW on mean makespan (the paper's headline
@@ -23,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -38,9 +47,97 @@ ARTIFACT_NAME = "BENCH_paper_grid.json"
 REPORT_NAME = "paper_grid.md"
 
 
+def grid_executor(workers: int):
+    """Spawn-context process pool for grid batches.
+
+    Spawn (not fork): the parent usually holds an initialized JAX/XLA
+    runtime whose thread state must not be forked.  Callers that time
+    repeated grids should create this once and pass it to ``run_grid``
+    so worker start-up (interpreter + imports) amortizes.
+    """
+    import multiprocessing
+    from concurrent.futures import ProcessPoolExecutor
+
+    return ProcessPoolExecutor(
+        max_workers=workers,
+        mp_context=multiprocessing.get_context("spawn"),
+    )
+
+
 def _chunked(seq: Sequence, n: int):
     for i in range(0, len(seq), n):
         yield seq[i:i + n]
+
+
+def _merge_stats(parts: List[Dict]) -> Dict:
+    """Combine per-engine ``dispatch_stats`` payloads."""
+    out: Dict = {"rounds": 0, "batched_calls": 0, "batched_cycles": 0,
+                 "serial_cycles": 0, "aggregate_pairs_hist": {},
+                 "max_member_pairs_batched": 0,
+                 "min_member_pairs_batched": 0}
+    mins = []
+    for s in parts:
+        for k in ("rounds", "batched_calls", "batched_cycles",
+                  "serial_cycles"):
+            out[k] += s[k]
+        for b, n in s["aggregate_pairs_hist"].items():
+            out["aggregate_pairs_hist"][b] = \
+                out["aggregate_pairs_hist"].get(b, 0) + n
+        out["max_member_pairs_batched"] = max(
+            out["max_member_pairs_batched"], s["max_member_pairs_batched"])
+        if s["batched_cycles"]:
+            mins.append(s["min_member_pairs_batched"])
+    out["min_member_pairs_batched"] = min(mins) if mins else 0
+    return out
+
+
+def _grid_batch(
+    scenario: Scenario,
+    cfg: PlatformConfig,
+    batch: List[WorkloadCell],
+    trace: bool,
+    use_pallas: object,
+    batched: object,
+) -> Tuple[List[Dict], Dict]:
+    """Simulate one batch of workload cells × all scenario policies.
+
+    Self-contained and picklable-argument-only: this is both the serial
+    loop body and the unit of work a ``--workers`` process executes
+    (cells are regenerated in-worker from their deterministic seeds —
+    nothing heavy crosses the process boundary).
+    """
+    policies = [POLICY_BY_NAME[name] for name in scenario.policies]
+    members: List[GridMember] = []
+    labels: List[Tuple[WorkloadCell, str]] = []
+    pre: List[Dict[int, float]] = []
+    for cell in batch:
+        wl = cell_workload(cfg, cell.app, cell.rate, cell.budget_interval,
+                           cell.workload_seed, scenario.n_workflows,
+                           scenario.sizes)
+        protos = {}
+        for pol in policies:
+            if pol.budget_mode not in protos:
+                protos[pol.budget_mode] = predistribute_workload(
+                    cfg, wl, pol.budget_mode)
+            proto, spares = protos[pol.budget_mode]
+            members.append((pol, clone_workload(proto), cell.seed))
+            labels.append((cell, pol.name))
+            pre.append(spares)
+    engine = BatchSimEngine(cfg, members, trace=trace, predistributed=pre,
+                            use_pallas=use_pallas, batched=batched)
+    results = engine.run()
+    rows: List[Dict] = []
+    for (cell, pol_name), res, st in zip(labels, results, engine.states):
+        m = CellMetrics.from_result(pol_name, res, st.trace_rows)
+        rows.append({
+            "app": cell.app,
+            "rate_wf_per_min": cell.rate,
+            "budget_lo": cell.budget_interval[0],
+            "budget_hi": cell.budget_interval[1],
+            "seed": cell.seed,
+            **m.to_dict(),
+        })
+    return rows, engine.dispatch_stats()
 
 
 def run_grid(
@@ -49,49 +146,59 @@ def run_grid(
     cells_per_batch: int = 8,
     trace: bool = True,
     verbose: bool = False,
+    workers: int = 1,
+    use_pallas: object = "auto",
+    batched: object = "auto",
+    executor=None,
 ) -> Dict:
-    """Run the whole grid; returns the artifact payload."""
+    """Run the whole grid; returns the artifact payload.
+
+    ``workers > 1`` fans the cell batches out to a process pool
+    (spawn context — safe with an initialized JAX runtime in the
+    parent).  ``executor`` lets callers reuse a warm pool across runs
+    (the grid-wall benchmark does); it must come from
+    ``grid_executor(workers)``.
+    """
     cfg = cfg or PlatformConfig()
-    policies = [POLICY_BY_NAME[name] for name in scenario.policies]
     wcells = list(scenario.workload_cells())
     t0 = time.perf_counter()
-    rows: List[Dict] = []
-    collected: List[CellMetrics] = []
 
-    for batch in _chunked(wcells, cells_per_batch):
-        members: List[GridMember] = []
-        labels: List[Tuple[WorkloadCell, str]] = []
-        pre: List[Dict[int, float]] = []
-        for cell in batch:
-            wl = cell_workload(cfg, cell.app, cell.rate, cell.budget_interval,
-                               cell.workload_seed, scenario.n_workflows,
-                               scenario.sizes)
-            protos = {}
-            for pol in policies:
-                if pol.budget_mode not in protos:
-                    protos[pol.budget_mode] = predistribute_workload(
-                        cfg, wl, pol.budget_mode)
-                proto, spares = protos[pol.budget_mode]
-                members.append((pol, clone_workload(proto), cell.seed))
-                labels.append((cell, pol.name))
-                pre.append(spares)
-        engine = BatchSimEngine(cfg, members, trace=trace, predistributed=pre)
-        results = engine.run()
-        for (cell, pol_name), res, st in zip(labels, results, engine.states):
-            m = CellMetrics.from_result(pol_name, res, st.trace_rows)
-            collected.append(m)
-            rows.append({
-                "app": cell.app,
-                "rate_wf_per_min": cell.rate,
-                "budget_lo": cell.budget_interval[0],
-                "budget_hi": cell.budget_interval[1],
-                "seed": cell.seed,
-                **m.to_dict(),
-            })
-        if verbose:
-            done = len(rows)
-            print(f"  {done}/{scenario.n_cells} cells "
-                  f"({time.perf_counter() - t0:.1f}s)")
+    if workers > 1 and len(wcells) > 1:
+        # Small chunks load-balance heterogeneous cells across the pool.
+        per = max(1, min(cells_per_batch,
+                         math.ceil(len(wcells) / (workers * 2))))
+    else:
+        per = cells_per_batch
+    batches = list(_chunked(wcells, per))
+
+    parts: List[Tuple[List[Dict], Dict]] = []
+    if workers > 1 and len(batches) > 1:
+        own = executor is None
+        ex = executor or grid_executor(workers)
+        try:
+            futs = [ex.submit(_grid_batch, scenario, cfg, b, trace,
+                              use_pallas, batched) for b in batches]
+            for i, f in enumerate(futs):
+                parts.append(f.result())
+                if verbose:
+                    done = sum(len(p[0]) for p in parts)
+                    print(f"  {done}/{scenario.n_cells} cells "
+                          f"({time.perf_counter() - t0:.1f}s)")
+        finally:
+            if own:
+                ex.shutdown()
+    else:
+        for batch in batches:
+            parts.append(_grid_batch(scenario, cfg, batch, trace,
+                                     use_pallas, batched))
+            if verbose:
+                done = sum(len(p[0]) for p in parts)
+                print(f"  {done}/{scenario.n_cells} cells "
+                      f"({time.perf_counter() - t0:.1f}s)")
+
+    rows = [r for part_rows, _ in parts for r in part_rows]
+    stats = _merge_stats([s for _, s in parts])
+    collected = [CellMetrics.from_dict(r) for r in rows]
 
     summary = aggregate_by_policy(collected)
     ebpsm = summary.get("EBPSM", {})
@@ -104,6 +211,9 @@ def run_grid(
         "n_workflows_per_cell": scenario.n_workflows,
         "ebpsm_budget_met_floor": scenario.ebpsm_budget_met_floor,
         "wall_s": time.perf_counter() - t0,
+        "workers": workers,
+        "use_pallas": str(use_pallas),
+        "dispatch": stats,
         "summary_by_policy": summary,
         "ebpsm_vs_mslbl_makespan_ratio": (
             ebpsm["mean_makespan_s"] / mslbl["mean_makespan_s"]
@@ -199,6 +309,10 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--out", default="artifacts/exp")
     ap.add_argument("--cells-per-batch", type=int, default=8,
                     help="workload cells per batched engine run")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process-pool width for cell batches (cells are "
+                         "independent; the full paper grid parallelizes "
+                         "across cores)")
     ap.add_argument("--check-floors", action="store_true",
                     help="exit non-zero on budget-met floor / makespan-win "
                          "regressions")
@@ -207,9 +321,10 @@ def main(argv: Optional[List[str]] = None) -> None:
     scenario = get_scenario(args.grid)
     print(f"grid {scenario.name}: {scenario.n_cells} cells "
           f"({scenario.n_workload_cells} workloads x "
-          f"{len(scenario.policies)} policies)")
+          f"{len(scenario.policies)} policies)"
+          + (f", {args.workers} workers" if args.workers > 1 else ""))
     art = run_grid(scenario, cells_per_batch=args.cells_per_batch,
-                   verbose=True)
+                   verbose=True, workers=args.workers)
 
     os.makedirs(args.out, exist_ok=True)
     jpath = os.path.join(args.out, ARTIFACT_NAME)

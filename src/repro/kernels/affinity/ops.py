@@ -23,6 +23,22 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def resolve_use_pallas(flag) -> bool:
+    """``"auto"`` → Pallas on TPU, jnp oracle elsewhere (the interpreter
+    that backs Pallas off-TPU is orders of magnitude slower than the
+    compiled jnp path, so "auto" only engages the kernel where it pays).
+    Booleans pass through."""
+    if flag == "auto":
+        return jax.default_backend() == "tpu"
+    return bool(flag)
+
+
+def donation_supported() -> bool:
+    """Whether input-buffer donation actually transfers ownership on the
+    default backend (CPU ignores donation and warns)."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
 def _affinity_core(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
                    vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
                    bp_ms: float, use_pallas: bool) -> AffinityOut:
@@ -45,19 +61,44 @@ def affinity(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
                           use_pallas)
 
 
-@partial(jax.jit, static_argnames=("gs_read", "gs_write", "bp_ms", "use_pallas"))
-def affinity_batch(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
-                   vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
-                   bp_ms: float, use_pallas: bool = False) -> AffinityOut:
-    """Batched affinity: every array carries a leading simulation dim ``B``.
-
-    Task arrays are ``[B, T]``, pair arrays ``[B, T, V]``, VM arrays
-    ``[B, V]`` (members may pool different VM fleets).  Inert members pad
-    with ``tier = 0`` rows, which are infeasible by construction.
-    """
+def _affinity_batch_impl(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+                         vm_mips, vm_bw, vm_price, gs_read: float,
+                         gs_write: float, bp_ms: float,
+                         use_pallas: bool = False) -> AffinityOut:
     def one(s, o, b, m, c, t, mi, bw, pr):
         return _affinity_core(s, o, b, m, c, t, mi, bw, pr,
                               gs_read, gs_write, bp_ms, use_pallas)
 
     return jax.vmap(one)(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
                          vm_mips, vm_bw, vm_price)
+
+
+_BATCH_STATIC = ("gs_read", "gs_write", "bp_ms", "use_pallas")
+_affinity_batch_jit = jax.jit(_affinity_batch_impl,
+                              static_argnames=_BATCH_STATIC)
+# On accelerators the round buffers' device transfers are single-use:
+# donating them lets XLA reuse the staging buffers for outputs instead of
+# holding both alive across the call.
+_affinity_batch_donated = jax.jit(_affinity_batch_impl,
+                                  static_argnames=_BATCH_STATIC,
+                                  donate_argnums=tuple(range(9)))
+
+
+def affinity_batch(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+                   vm_mips, vm_bw, vm_price, gs_read: float, gs_write: float,
+                   bp_ms: float, use_pallas: bool = False,
+                   donate: bool = False) -> AffinityOut:
+    """Batched affinity: every array carries a leading simulation dim ``B``.
+
+    Task arrays are ``[B, T]``, pair arrays ``[B, T, V]``, VM arrays
+    ``[B, V]`` (members may pool different VM fleets).  Inert members pad
+    with ``tier = 0`` rows, which are infeasible by construction.
+
+    ``donate=True`` routes through the donating jit (see
+    :func:`donation_supported`); host-side round buffers stay reusable —
+    only the on-device staging copies are consumed.
+    """
+    fn = _affinity_batch_donated if donate else _affinity_batch_jit
+    return fn(size_mi, out_mb, budget, missing_mb, cont_ms, tier,
+              vm_mips, vm_bw, vm_price, gs_read=gs_read, gs_write=gs_write,
+              bp_ms=bp_ms, use_pallas=use_pallas)

@@ -20,8 +20,10 @@ on top of the append-only ``vms`` list:
   container-image caches (the batched scheduling cycle builds its
   container-delay vectors from these instead of per-VM Python calls);
 * ``tag_members`` — owner_tag → vmid set (sharing-scope masks);
-* per-vmid ``mips`` / ``bandwidth`` / ``price`` float arrays, grown
-  amortized on provision (device-friendly gathers by vmid).
+* per-vmid ``mips`` / ``bandwidth`` / ``price`` float64 arrays plus the
+  ``type_idx`` int array, grown amortized on provision (device-friendly
+  gathers by vmid; float64 so the vectorized scheduler reproduces the
+  scalar estimates bit-for-bit, cast to f32 only at the kernel boundary).
 
 ``VM.idle_epoch`` increments on every →IDLE transition; deferred REAP
 events carry the epoch they were armed for, so a reap can never kill a
@@ -32,7 +34,6 @@ returns to idle within the same millisecond).
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -49,7 +50,7 @@ VM_BUSY = 3
 VM_TERMINATED = 4
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class VM:
     vmid: int
     vmt_idx: int
@@ -63,12 +64,13 @@ class VM:
     terminated_ms: int = -1
     active_container: Optional[str] = None
     owner_tag: Optional[object] = None  # NS: wid; WS: app; else None
-    # FIFO caches (insertion-ordered).
-    image_cache: "OrderedDict[str, bool]" = dataclasses.field(
-        default_factory=OrderedDict
-    )
-    data_cache: "OrderedDict[DataKey, float]" = dataclasses.field(
-        default_factory=OrderedDict
+    # FIFO caches: plain dicts (insertion-ordered since 3.7) — membership
+    # checks on these are the hottest ops in the scheduler, and dict
+    # lookups beat OrderedDict's doubly-linked bookkeeping.  FIFO
+    # eviction pops the first key via iteration order.
+    image_cache: Dict[str, bool] = dataclasses.field(default_factory=dict)
+    data_cache: Dict[DataKey, float] = dataclasses.field(
+        default_factory=dict
     )
     cached_mb: float = 0.0
 
@@ -97,7 +99,8 @@ class VM:
             self.image_cache[app] = True
         self.active_container = app
         while len(self.image_cache) > cfg.image_slots:
-            old, _ = self.image_cache.popitem(last=False)  # FIFO eviction
+            old = next(iter(self.image_cache))  # FIFO eviction
+            del self.image_cache[old]
             if self.active_container == old:
                 # An evicted image can't stay active — otherwise later
                 # container_ms calls report 0 for an uncached image.
@@ -130,7 +133,8 @@ class VM:
         while (
             self.cached_mb > cap_mb or len(self.data_cache) > cfg.cache_slots
         ) and self.data_cache:
-            old_key, old_mb = self.data_cache.popitem(last=False)
+            old_key = next(iter(self.data_cache))   # FIFO eviction
+            old_mb = self.data_cache.pop(old_key)
             self.cached_mb -= old_mb
             if index is not None and old_key in index:
                 holders = index[old_key]
@@ -158,9 +162,13 @@ class VMPool:
         self.app_active: Dict[str, set] = {}
         self.tag_members: Dict[object, set] = {}
         # Per-vmid static VM-type attributes, grown amortized on provision.
-        self.mips = np.empty(64, np.float32)
-        self.bandwidth = np.empty(64, np.float32)
-        self.price = np.empty(64, np.float32)
+        # float64: the vectorized scheduler.select computes the same IEEE
+        # doubles as the scalar reference from these (the affinity kernel
+        # casts to f32 at its buffer boundary, same rounding as before).
+        self.mips = np.empty(64, np.float64)
+        self.bandwidth = np.empty(64, np.float64)
+        self.price = np.empty(64, np.float64)
+        self.type_idx = np.zeros(64, np.int64)
         self.vm_seconds_by_type: Dict[str, float] = {
             v.name: 0.0 for v in cfg.vm_types
         }
@@ -186,13 +194,15 @@ class VMPool:
         self.tag_members.setdefault(owner_tag, set()).add(vm.vmid)
         if vm.vmid >= len(self.mips):
             grow = max(len(self.mips) * 2, vm.vmid + 1)
-            for name in ("mips", "bandwidth", "price"):
-                arr = np.empty(grow, np.float32)
-                arr[: len(getattr(self, name))] = getattr(self, name)
+            for name in ("mips", "bandwidth", "price", "type_idx"):
+                old = getattr(self, name)
+                arr = np.empty(grow, old.dtype)
+                arr[: len(old)] = old
                 setattr(self, name, arr)
         self.mips[vm.vmid] = vmt.mips
         self.bandwidth[vm.vmid] = vmt.bandwidth_mbps
         self.price[vm.vmid] = vmt.cost_per_bp
+        self.type_idx[vm.vmid] = vmt_idx
         self.vm_count_by_type[vmt.name] += 1
         return vm
 

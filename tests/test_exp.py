@@ -150,3 +150,28 @@ def test_grid_matches_sequential_reference():
         assert row["mean_makespan_s"] == pytest.approx(
             float(mks.mean()) / 1000.0, rel=1e-12)
         assert row["budget_met"] == pytest.approx(ref.budget_met_fraction)
+
+
+def test_run_grid_workers_matches_serial():
+    """--workers fans cell batches across a spawn pool; rows and
+    summaries must equal the serial run exactly (cells are independent
+    and regenerate deterministically in-worker).  Dispatch stats are
+    chunking-dependent in general; with cells_per_batch=1 the chunking
+    coincides, so they must match too."""
+    two = Scenario(
+        name="unit-two-cells",
+        description="two-cell workers grid",
+        apps=("montage", "sipht"),
+        rates=(6.0,),
+        budget_intervals=((0.5, 1.0),),
+        policies=("EBPSM", "MSLBL_MW"),
+        seeds=(0,),
+        n_workflows=3,
+        sizes=("small",),
+    )
+    serial = exp_run.run_grid(two, cells_per_batch=1)
+    par = exp_run.run_grid(two, cells_per_batch=1, workers=2)
+    assert par["workers"] == 2
+    assert par["cells"] == serial["cells"]
+    assert par["summary_by_policy"] == serial["summary_by_policy"]
+    assert par["dispatch"] == serial["dispatch"]
