@@ -28,6 +28,8 @@ speedup in CI.
 from __future__ import annotations
 
 import os
+import platform as _platform
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -45,6 +47,25 @@ REPEATS = 3
 PR3_REFERENCE_WALL_S = 1.21
 
 _LAST: Optional[Dict] = None
+
+
+def host_info() -> Dict:
+    """Machine fingerprint recorded in the artifact: wall-clock numbers
+    (and the ``check_speedup --grid-floor`` gate) are only comparable
+    between runs whose host blocks match."""
+    import jax
+    import numpy
+
+    return {
+        "cpu_count": os.cpu_count(),
+        "platform": _platform.platform(),
+        "machine": _platform.machine(),
+        "processor": _platform.processor(),
+        "python": sys.version.split()[0],
+        "jax": jax.__version__,
+        "numpy": numpy.__version__,
+        "jax_default_backend": jax.default_backend(),
+    }
 
 
 def _best_wall(fn, repeats: int = REPEATS) -> float:
@@ -93,6 +114,7 @@ def _measure(full: bool = False) -> Dict:
     return {
         "bench": "grid_wall",
         "grid": GRID,
+        "host": host_info(),
         "repeats": repeats,
         "n_cells": art_serial["n_cells"],
         "wall_legacy_s": wall_legacy,

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math as _math
+import os as _os
 import time as _time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -50,6 +51,29 @@ AUCTION_MIN_PAIRS = 8192
 
 # Queue-order metadata for one cycle's drained tasks: (wid, tid, inputs).
 CycleMeta = Tuple[int, int, List[Tuple[DataKey, float]]]
+
+
+def _profile_enabled() -> bool:
+    """Opt-in per-phase timing (``REPRO_PROFILE=1``).
+
+    Off by default: the counters wrap the per-dispatch hot path with two
+    ``perf_counter`` calls each, which is measurable at paper scale.  Read
+    per ``SimState`` so tests can toggle via monkeypatch.
+    """
+    return _os.environ.get("REPRO_PROFILE") == "1"
+
+
+def new_profile() -> Dict[str, float]:
+    """Fresh per-phase counter block (seconds + call counts)."""
+    return {
+        "distribute_s": 0.0,      # Algorithm 1 / MSLBL arrival distribution
+        "redistribute_s": 0.0,    # Algorithm 3 per-finish redistribution
+        "select_s": 0.0,          # per-task scheduler.select calls
+        "pipeline_s": 0.0,        # execution-pipeline math + cache updates
+        "distributions": 0.0,
+        "redistributions": 0.0,
+        "selects": 0.0,
+    }
 
 
 @dataclasses.dataclass(slots=True)
@@ -117,6 +141,11 @@ class SimState:
         self.container_warm = 0
         self.container_init = 0
         self.container_cold = 0
+        # Opt-in per-phase wall-clock counters (REPRO_PROFILE=1): how much
+        # of a run the Algorithm 1/3 budget algebra, selection, and the
+        # pipeline math each cost — see BatchSimEngine.dispatch_stats().
+        self.profile: Optional[Dict[str, float]] = (
+            new_profile() if _profile_enabled() else None)
         total_tasks = sum(w.n_tasks for w in self.workflows)
         # Global per-task degradation tables, indexed by task global id.
         # Kept as plain-float lists: the pipeline math runs per dispatch
@@ -186,9 +215,17 @@ class SimState:
         if self.predistributed is not None and wid in self.predistributed:
             st.spare = self.predistributed[wid]  # tasks already carry budgets
         elif self.policy.budget_mode == "mslbl":
+            t0 = _time.perf_counter() if self.profile is not None else 0.0
             distribute_budget_mslbl(self.cfg, wf, wf.budget)
+            if self.profile is not None:
+                self.profile["distribute_s"] += _time.perf_counter() - t0
+                self.profile["distributions"] += 1
         else:
+            t0 = _time.perf_counter() if self.profile is not None else 0.0
             st.spare = budget_mod.distribute_budget(self.cfg, wf, wf.budget)
+            if self.profile is not None:
+                self.profile["distribute_s"] += _time.perf_counter() - t0
+                self.profile["distributions"] += 1
         for tid in wf.entry_tasks():
             heapq.heappush(self.queue, (self.now, wid, tid))
 
@@ -229,10 +266,19 @@ class SimState:
         st.finish_ms = max(st.finish_ms, self.now)
         if self.policy.budget_mode == "mslbl":
             st.spare += task.budget - actual
-        else:
+        elif self.profile is None:
             st.spare = budget_mod.update_budget(
                 self.cfg, wf, tid, actual, st.spare, st.unscheduled
             )
+        else:
+            # Algorithm 3: one redistribution per task finish — the
+            # dominant serial cost at paper scale (see ROADMAP).
+            t0 = _time.perf_counter()
+            st.spare = budget_mod.update_budget(
+                self.cfg, wf, tid, actual, st.spare, st.unscheduled
+            )
+            self.profile["redistribute_s"] += _time.perf_counter() - t0
+            self.profile["redistributions"] += 1
         # Release ready children.
         for c in task.children:
             st.pending_parents[c] -= 1
@@ -288,6 +334,7 @@ class SimState:
             if self.policy.budget_mode == "mslbl" and st.spare > 0:
                 budget_eff += st.spare
             inputs = self._inputs_of(wf, task)
+            t0 = _time.perf_counter() if self.profile is not None else 0.0
             placement = select(
                 self.cfg,
                 self.policy,
@@ -300,6 +347,9 @@ class SimState:
                 table=cost_tables.table_for(self.cfg, wf),
                 pool=self.pool,
             )
+            if self.profile is not None:
+                self.profile["select_s"] += _time.perf_counter() - t0
+                self.profile["selects"] += 1
             if self.policy.budget_mode == "mslbl":
                 # Spare consumed by how much the estimate exceeds the base.
                 used = max(0.0, placement.est_cost - task.budget)
@@ -385,6 +435,7 @@ class SimState:
     def _start_pipeline(
         self, wid: int, tid: int, vm: VM, triggered_provision: bool
     ) -> None:
+        tp0 = _time.perf_counter() if self.profile is not None else 0.0
         st = self.wf_state[wid]
         wf = st.wf
         task = wf.tasks[tid]
@@ -455,10 +506,37 @@ class SimState:
         run = _Running(wid, tid, vm, triggered_provision, actual_cost)
         self.running[(wid, tid)] = run
         self._push(finish, FINISH, (wid, tid))
+        if self.profile is not None:
+            self.profile["pipeline_s"] += _time.perf_counter() - tp0
 
     # ---- results ---------------------------------------------------------------
+    def _fleet_stats(self) -> Tuple[int, float]:
+        """(peak concurrent VMs, time-weighted mean fleet size) from the
+        pool's lease intervals — every VM is terminated by finalize, so
+        both endpoints are defined."""
+        deltas: List[Tuple[int, int]] = []
+        horizon = 0
+        for vm in self.pool.vms:
+            end = vm.terminated_ms if vm.terminated_ms >= 0 else self.now
+            deltas.append((vm.lease_start_ms, 1))
+            deltas.append((end, -1))
+            horizon = max(horizon, end)
+        if not deltas or horizon <= 0:
+            return 0, 0.0
+        deltas.sort()
+        peak = cur = 0
+        area = 0.0   # VM-ms integral
+        prev = 0
+        for t, d in deltas:
+            area += cur * (t - prev)
+            prev = t
+            cur += d
+            peak = max(peak, cur)
+        return peak, area / horizon
+
     def finalize(self, wall_s: float = 0.0) -> SimResult:
         self.pool.finalize(self.now)
+        peak_vms, mean_fleet = self._fleet_stats()
         results = [
             WorkflowResult(
                 wid=s.wf.wid,
@@ -483,6 +561,8 @@ class SimState:
             container_warm=self.container_warm,
             container_init=self.container_init,
             container_cold=self.container_cold,
+            peak_vms=peak_vms,
+            mean_fleet_vms=mean_fleet,
         )
 
 

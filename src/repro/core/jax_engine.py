@@ -223,7 +223,7 @@ class BatchSimEngine:
             b = 1 << max(int(p) - 1, 0).bit_length() if p else 0
             key = str(b)
             hist[key] = hist.get(key, 0) + 1
-        return {
+        out: Dict[str, object] = {
             "rounds": self.rounds,
             "batched_calls": self.batched_calls,
             "batched_cycles": self.batched_cycles,
@@ -234,6 +234,22 @@ class BatchSimEngine:
             "min_member_pairs_batched": min(self.batched_member_pairs,
                                             default=0),
         }
+        # REPRO_PROFILE=1 per-phase counters, summed across members.  The
+        # headline derived number is the Algorithm-3 redistribution share
+        # of the grid wall — the quantity behind the ROADMAP's "~45% of a
+        # heavy cell" claim and the batched-redistribution decision.
+        profs = [st.profile for st in self.states if st.profile is not None]
+        if profs:
+            agg = {k: float(sum(p[k] for p in profs)) for k in profs[0]}
+            # The share's denominator is this engine's own wall; when
+            # stats from several (possibly concurrent) engines are merged
+            # the consumer must recompute the share from the summed
+            # engine walls, not from its elapsed time (see exp.run).
+            agg["engine_wall_s"] = self.wall_s
+            agg["redistribute_share_of_wall"] = (
+                agg["redistribute_s"] / self.wall_s if self.wall_s else 0.0)
+            out["profile"] = agg
+        return out
 
 
 # ---------------------------------------------------------------------------

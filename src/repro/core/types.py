@@ -169,14 +169,41 @@ class Workflow:
         )
 
     def validate(self) -> None:
-        """Sanity-check DAG structure (used by tests and generators)."""
+        """Check DAG structure; raises :class:`ValueError` with a concrete
+        message on malformed input.
+
+        Generators *and importers* (``tenants.traces``) run this before a
+        workflow ever reaches an engine: a cycle or dangling edge must be
+        rejected at load time with a clear error, not crash mid-sim.
+        """
         n = len(self.tasks)
-        for t in self.tasks:
-            assert 0 <= t.tid < n
+        if n == 0:
+            raise ValueError(f"workflow {self.wid} ({self.app!r}) is empty")
+        for i, t in enumerate(self.tasks):
+            if t.tid != i:
+                raise ValueError(
+                    f"workflow {self.wid}: task at position {i} has "
+                    f"tid {t.tid} (tids must equal list position)")
             for p in t.parents:
-                assert 0 <= p < n and t.tid in self.tasks[p].children
+                if not 0 <= p < n:
+                    raise ValueError(
+                        f"workflow {self.wid}: task {t.tid} names parent "
+                        f"{p}, outside 0..{n - 1}")
+                if t.tid not in self.tasks[p].children:
+                    raise ValueError(
+                        f"workflow {self.wid}: dangling edge — task "
+                        f"{t.tid} lists parent {p}, but {p} does not list "
+                        f"{t.tid} as a child")
             for c in t.children:
-                assert 0 <= c < n and t.tid in self.tasks[c].parents
+                if not 0 <= c < n:
+                    raise ValueError(
+                        f"workflow {self.wid}: task {t.tid} names child "
+                        f"{c}, outside 0..{n - 1}")
+                if t.tid not in self.tasks[c].parents:
+                    raise ValueError(
+                        f"workflow {self.wid}: dangling edge — task "
+                        f"{t.tid} lists child {c}, but {c} does not list "
+                        f"{t.tid} as a parent")
         # Acyclicity via Kahn's algorithm.
         indeg = [len(t.parents) for t in self.tasks]
         stack = [i for i, d in enumerate(indeg) if d == 0]
@@ -188,7 +215,10 @@ class Workflow:
                 indeg[c] -= 1
                 if indeg[c] == 0:
                     stack.append(c)
-        assert seen == n, "workflow DAG has a cycle"
+        if seen != n:
+            cyc = sorted(i for i, d in enumerate(indeg) if d > 0)
+            raise ValueError(
+                f"workflow {self.wid}: DAG has a cycle through tasks {cyc}")
 
 
 def clone_workload(workflows: Sequence[Workflow]) -> List[Workflow]:
@@ -242,6 +272,12 @@ class SimResult:
     container_warm: int = 0
     container_init: int = 0
     container_cold: int = 0
+    # Fleet-size-over-time summary (online/open-stream scenarios): the
+    # maximum number of concurrently leased VMs and the time-weighted
+    # mean over [0, last event].  Computed from the pool's lease
+    # intervals at finalize time.
+    peak_vms: int = 0
+    mean_fleet_vms: float = 0.0
 
     @property
     def avg_vm_utilization(self) -> float:

@@ -38,6 +38,40 @@ class CellMetrics:
     # 3=any idle, 4=new VM, 5=insufficient-budget fallback); empty when
     # the run was not traced.
     tier_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # ---- online / multi-tenant extensions (zero-valued for closed grids).
+    # Slowdown = makespan ÷ critical-path ideal (tenants.ideal_makespan_ms);
+    # requires ``ideal_ms`` at collection time.
+    p50_slowdown: float = 0.0
+    p95_slowdown: float = 0.0
+    # Jain fairness index over per-tenant mean slowdowns: 1 = every tenant
+    # slowed equally, 1/n = one tenant absorbs all the queueing.
+    jain_fairness: float = 0.0
+    # Fleet size over time (from SimResult lease intervals).
+    peak_vms: int = 0
+    mean_fleet_vms: float = 0.0
+    # Workflows that arrived during warm-up and were excluded from every
+    # statistic above (online scenarios truncate the cold-start ramp).
+    n_warmup_excluded: int = 0
+    # Per-tenant and per-QoS-class breakdowns:
+    # {name: {n, budget_met, mean_makespan_s, p50_slowdown, p95_slowdown}}.
+    by_tenant: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    by_qos: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def _group_stats(rows: List[tuple]) -> Dict:
+        """rows: (makespan_ms, met, slowdown-or-nan)."""
+        mks = np.array([r[0] for r in rows], np.float64)
+        slow = np.array([r[2] for r in rows], np.float64)
+        have_slow = len(slow) and not np.isnan(slow).any()
+        return {
+            "n": len(rows),
+            "budget_met": float(np.mean([r[1] for r in rows])),
+            "mean_makespan_s": float(mks.mean()) / 1000.0,
+            "p50_slowdown": float(np.percentile(slow, 50))
+            if have_slow else 0.0,
+            "p95_slowdown": float(np.percentile(slow, 95))
+            if have_slow else 0.0,
+        }
 
     @classmethod
     def from_result(
@@ -45,29 +79,86 @@ class CellMetrics:
         policy: str,
         res: SimResult,
         trace_rows: Optional[Sequence[tuple]] = None,
+        tenant_of: Optional[Dict[int, str]] = None,
+        qos_of: Optional[Dict[str, str]] = None,
+        ideal_ms: Optional[Dict[int, int]] = None,
+        warmup_ms: int = 0,
     ) -> "CellMetrics":
-        mks = np.array([w.makespan_ms for w in res.workflows], np.float64)
-        ratios = np.array(
-            [w.cost_budget_ratio for w in res.workflows], np.float64
-        )
+        """``tenant_of`` (wid → tenant), ``qos_of`` (tenant → QoS class)
+        and ``ideal_ms`` (wid → critical-path lower bound) switch on the
+        per-tenant online metrics; ``warmup_ms`` drops workflows that
+        arrived before it from every statistic (cold-start truncation)."""
+        wfs = [w for w in res.workflows if w.arrival_ms >= warmup_ms]
+        n_excluded = len(res.workflows) - len(wfs)
+        mks = np.array([w.makespan_ms for w in wfs], np.float64)
+        ratios = np.array([w.cost_budget_ratio for w in wfs], np.float64)
+        # Truncation covers the tier histogram too: placements made by
+        # warm-up-excluded workflows (trace row = (t, wid, tid, tier, ...))
+        # must not bias the locality rates of the reported set.
+        kept = {w.wid for w in wfs}
         tiers = (
-            dict(sorted(collections.Counter(r[3] for r in trace_rows).items()))
+            dict(sorted(collections.Counter(
+                r[3] for r in trace_rows if r[1] in kept).items()))
             if trace_rows else {}
         )
+        slowdowns = {
+            w.wid: w.makespan_ms / max(ideal_ms.get(w.wid, 0), 1)
+            for w in wfs
+        } if ideal_ms else {}
+        p50 = p95 = 0.0
+        if slowdowns:
+            vals = np.array(list(slowdowns.values()), np.float64)
+            p50 = float(np.percentile(vals, 50))
+            p95 = float(np.percentile(vals, 95))
+        by_tenant: Dict[str, Dict] = {}
+        by_qos: Dict[str, Dict] = {}
+        jain = 0.0
+        if tenant_of:
+            grouped: Dict[str, List[tuple]] = {}
+            for w in wfs:
+                row = (w.makespan_ms, w.budget_met,
+                       slowdowns.get(w.wid, float("nan")))
+                grouped.setdefault(tenant_of.get(w.wid, "?"), []).append(row)
+            by_tenant = {name: cls._group_stats(rows)
+                         for name, rows in sorted(grouped.items())}
+            if qos_of:
+                q_rows: Dict[str, List[tuple]] = {}
+                for name, rows in grouped.items():
+                    q_rows.setdefault(qos_of.get(name, "?"), []).extend(rows)
+                by_qos = {q: cls._group_stats(rows)
+                          for q, rows in sorted(q_rows.items())}
+            if slowdowns:
+                per_tenant_mean = np.array([
+                    np.mean([r[2] for r in rows])
+                    for rows in grouped.values()], np.float64)
+                jain = float(per_tenant_mean.sum() ** 2
+                             / (len(per_tenant_mean)
+                                * (per_tenant_mean ** 2).sum()))
+        # Budget-met over the post-warmup set (res.budget_met_fraction
+        # would include warm-up workflows).
+        met = float(np.mean([w.budget_met for w in wfs])) if wfs else 1.0
         return cls(
             policy=policy,
-            n_workflows=len(res.workflows),
+            n_workflows=len(wfs),
             mean_makespan_s=float(mks.mean()) / 1000.0 if len(mks) else 0.0,
             p95_makespan_s=float(np.percentile(mks, 95)) / 1000.0
             if len(mks) else 0.0,
             mean_cost_budget_ratio=float(ratios.mean()) if len(ratios) else 0.0,
-            budget_met=res.budget_met_fraction,
+            budget_met=met,
             utilization=res.avg_vm_utilization,
             total_vms=res.total_vms,
             vm_lease_s=float(sum(res.vm_seconds_by_type.values())),
             data_cache_hit_rate=res.data_cache_hit_rate,
             container_hit_rate=res.container_hit_rate,
             tier_hist=tiers,
+            p50_slowdown=p50,
+            p95_slowdown=p95,
+            jain_fairness=jain,
+            peak_vms=res.peak_vms,
+            mean_fleet_vms=res.mean_fleet_vms,
+            n_warmup_excluded=n_excluded,
+            by_tenant=by_tenant,
+            by_qos=by_qos,
         )
 
     @property
@@ -123,5 +214,10 @@ def aggregate_by_policy(cells: Sequence[CellMetrics]) -> Dict[str, Dict]:
                 np.mean([m.data_cache_hit_rate for m in ms])),
             "container_hit_rate_mean": float(
                 np.mean([m.container_hit_rate for m in ms])),
+            # Online extensions (zero for closed grids).
+            "p50_slowdown_mean": float(np.mean([m.p50_slowdown for m in ms])),
+            "p95_slowdown_mean": float(np.mean([m.p95_slowdown for m in ms])),
+            "jain_fairness_min": float(np.min([m.jain_fairness for m in ms])),
+            "peak_vms_max": int(np.max([m.peak_vms for m in ms])),
         }
     return out

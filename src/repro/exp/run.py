@@ -41,7 +41,8 @@ from ..core.jax_engine import (BatchSimEngine, GridMember,
 from ..core.types import PlatformConfig, clone_workload
 from ..workflows.workload import cell_workload
 from .metrics import CellMetrics, aggregate_by_policy
-from .scenarios import POLICY_BY_NAME, Scenario, WorkloadCell, get_scenario
+from .scenarios import (POLICY_BY_NAME, OnlineScenario, Scenario,
+                        WorkloadCell, get_scenario)
 
 ARTIFACT_NAME = "BENCH_paper_grid.json"
 REPORT_NAME = "paper_grid.md"
@@ -76,6 +77,7 @@ def _merge_stats(parts: List[Dict]) -> Dict:
                  "max_member_pairs_batched": 0,
                  "min_member_pairs_batched": 0}
     mins = []
+    profiles: List[Dict] = []
     for s in parts:
         for k in ("rounds", "batched_calls", "batched_cycles",
                   "serial_cycles"):
@@ -87,7 +89,18 @@ def _merge_stats(parts: List[Dict]) -> Dict:
             out["max_member_pairs_batched"], s["max_member_pairs_batched"])
         if s["batched_cycles"]:
             mins.append(s["min_member_pairs_batched"])
+        if "profile" in s:
+            profiles.append(s["profile"])
     out["min_member_pairs_batched"] = min(mins) if mins else 0
+    if profiles:
+        # REPRO_PROFILE=1 phase counters: sum the absolute seconds
+        # (including the per-engine walls); the artifact assembler
+        # recomputes the share from the summed engine walls — the
+        # parent's elapsed time is not a valid denominator when parts
+        # ran concurrently in worker processes.
+        agg = {k: float(sum(p[k] for p in profiles)) for k in profiles[0]
+               if k != "redistribute_share_of_wall"}
+        out["profile"] = agg
     return out
 
 
@@ -198,9 +211,21 @@ def run_grid(
 
     rows = [r for part_rows, _ in parts for r in part_rows]
     stats = _merge_stats([s for _, s in parts])
-    collected = [CellMetrics.from_dict(r) for r in rows]
+    return _artifact(scenario, rows, stats,
+                     wall_s=time.perf_counter() - t0, workers=workers,
+                     use_pallas=use_pallas)
 
+
+def _artifact(scenario, rows: List[Dict], stats: Dict, wall_s: float,
+              workers: int, use_pallas: object, **extra) -> Dict:
+    """Assemble the ``BENCH_paper_grid.json``-schema payload (shared by
+    the closed-grid and online harnesses)."""
+    collected = [CellMetrics.from_dict(r) for r in rows]
     summary = aggregate_by_policy(collected)
+    prof = stats.get("profile")
+    if prof and prof.get("engine_wall_s"):
+        prof["redistribute_share_of_wall"] = \
+            prof["redistribute_s"] / prof["engine_wall_s"]
     ebpsm = summary.get("EBPSM", {})
     mslbl = summary.get("MSLBL_MW", {})
     return {
@@ -210,7 +235,7 @@ def run_grid(
         "n_cells": scenario.n_cells,
         "n_workflows_per_cell": scenario.n_workflows,
         "ebpsm_budget_met_floor": scenario.ebpsm_budget_met_floor,
-        "wall_s": time.perf_counter() - t0,
+        "wall_s": wall_s,
         "workers": workers,
         "use_pallas": str(use_pallas),
         "dispatch": stats,
@@ -221,7 +246,89 @@ def run_grid(
             else None
         ),
         "cells": rows,
+        **extra,
     }
+
+
+def run_online(
+    scenario: OnlineScenario,
+    cfg: Optional[PlatformConfig] = None,
+    trace: bool = True,
+    verbose: bool = False,
+    use_pallas: object = "auto",
+    batched: object = "auto",
+) -> Dict:
+    """Stream an :class:`OnlineScenario`'s tenant mix through the batched
+    engine, one merged multi-tenant stream per seed × every policy.
+
+    Every policy simulates a structural-sharing clone of the *same* merged
+    stream (budget distribution predistributed once per budget mode), so
+    policy comparisons stay paired; metrics truncate the warm-up window
+    and carry the per-tenant extensions (slowdown percentiles, per-QoS
+    budget-met, fleet size, Jain fairness).  Returns the same artifact
+    schema as :func:`run_grid`.
+    """
+    cfg = cfg or PlatformConfig()
+    t0 = time.perf_counter()
+    warmup_ms = int(scenario.warmup_s * 1000)
+    blo, bhi = scenario.mix.budget_span()
+    policies = [POLICY_BY_NAME[name] for name in scenario.policies]
+    rows: List[Dict] = []
+    stats_parts: List[Dict] = []
+    for seed in scenario.seeds:
+        tw = scenario.mix.build(cfg, seed)
+        ideal = tw.ideal_ms(cfg)
+        protos = {}
+        members: List[GridMember] = []
+        labels: List[str] = []
+        pre: List[Dict[int, float]] = []
+        for pol in policies:
+            if pol.budget_mode not in protos:
+                protos[pol.budget_mode] = predistribute_workload(
+                    cfg, tw.workflows, pol.budget_mode)
+            proto, spares = protos[pol.budget_mode]
+            members.append((pol, clone_workload(proto), seed))
+            labels.append(pol.name)
+            pre.append(spares)
+        engine = BatchSimEngine(cfg, members, trace=trace,
+                                predistributed=pre, use_pallas=use_pallas,
+                                batched=batched)
+        results = engine.run()
+        for name, res, st in zip(labels, results, engine.states):
+            m = CellMetrics.from_result(
+                name, res, st.trace_rows, tenant_of=tw.tenant_of,
+                qos_of=tw.qos_of, ideal_ms=ideal, warmup_ms=warmup_ms)
+            rows.append({
+                "app": "mixed",
+                "rate_wf_per_min": round(
+                    scenario.mix.mean_rate_per_min(), 3),
+                "budget_lo": blo,
+                "budget_hi": bhi,
+                "seed": seed,
+                **m.to_dict(),
+            })
+        stats_parts.append(engine.dispatch_stats())
+        if verbose:
+            print(f"  seed {seed}: {len(labels)} policies x "
+                  f"{len(tw.workflows)} workflows "
+                  f"({time.perf_counter() - t0:.1f}s)")
+    return _artifact(
+        scenario, rows, _merge_stats(stats_parts),
+        wall_s=time.perf_counter() - t0, workers=1, use_pallas=use_pallas,
+        scenario_kind="online",
+        warmup_s=scenario.warmup_s,
+        tenants=[{
+            "name": t.name,
+            "qos": t.qos.name,
+            "priority": t.qos.priority,
+            "budget_interval": list(t.qos.budget_interval),
+            "n_workflows": t.n_workflows,
+            "apps": list(t.apps),
+            "arrival": type(t.arrival).__name__ if t.arrival else "stream",
+            "mean_rate_per_min": (t.arrival.mean_rate_per_min()
+                                  if t.arrival else None),
+        } for t in scenario.mix.tenants],
+    )
 
 
 def check_floors(art: Dict) -> List[str]:
@@ -231,6 +338,17 @@ def check_floors(art: Dict) -> List[str]:
     floor = float(art.get("ebpsm_budget_met_floor", 0.0))
     for row in art["cells"]:
         if row["policy"] != "EBPSM":
+            continue
+        if row.get("n_workflows", 1) == 0:
+            # A cell whose workflows were all warm-up-excluded would pass
+            # the floor vacuously (budget_met defaults to 1.0) — fail
+            # loudly instead.
+            failures.append(
+                f"EBPSM cell has no post-warmup workflows (all "
+                f"{row.get('n_warmup_excluded', 0)} excluded) in cell "
+                f"app={row['app']} rate={row['rate_wf_per_min']} "
+                f"seed={row['seed']}"
+            )
             continue
         if row["budget_met"] < floor - 1e-9:
             failures.append(
@@ -319,12 +437,24 @@ def main(argv: Optional[List[str]] = None) -> None:
     args = ap.parse_args(argv)
 
     scenario = get_scenario(args.grid)
-    print(f"grid {scenario.name}: {scenario.n_cells} cells "
-          f"({scenario.n_workload_cells} workloads x "
-          f"{len(scenario.policies)} policies)"
-          + (f", {args.workers} workers" if args.workers > 1 else ""))
-    art = run_grid(scenario, cells_per_batch=args.cells_per_batch,
-                   verbose=True, workers=args.workers)
+    if isinstance(scenario, OnlineScenario):
+        if args.workers > 1:
+            print(f"note: --workers {args.workers} ignored — online grids "
+                  f"run single-process (policies within a stream share "
+                  f"one batched engine run)")
+        print(f"online grid {scenario.name}: {scenario.n_cells} cells "
+              f"({len(scenario.seeds)} seeds x "
+              f"{len(scenario.policies)} policies, "
+              f"{scenario.n_workflows} workflows/stream, "
+              f"warm-up {scenario.warmup_s:.0f}s)")
+        art = run_online(scenario, verbose=True)
+    else:
+        print(f"grid {scenario.name}: {scenario.n_cells} cells "
+              f"({scenario.n_workload_cells} workloads x "
+              f"{len(scenario.policies)} policies)"
+              + (f", {args.workers} workers" if args.workers > 1 else ""))
+        art = run_grid(scenario, cells_per_batch=args.cells_per_batch,
+                       verbose=True, workers=args.workers)
 
     os.makedirs(args.out, exist_ok=True)
     jpath = os.path.join(args.out, ARTIFACT_NAME)

@@ -16,9 +16,11 @@ policies × 1 seed) that the ``exp-smoke`` CI job gates on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator, Tuple, Union
 
 from ..core.scheduler import ALL_POLICIES, Policy
+from ..tenants import (BRONZE, GOLD, SILVER, Diurnal, MarkovModulated,
+                       Poisson, Tenant, TenantMix)
 
 POLICY_BY_NAME: Dict[str, Policy] = {p.name: p for p in ALL_POLICIES}
 
@@ -129,10 +131,122 @@ SCENARIOS: Dict[str, Scenario] = {
 }
 
 
-def get_scenario(name: str) -> Scenario:
-    try:
+# ---------------------------------------------------------------------------
+# Online (open-stream) scenario families — repro.tenants
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineScenario:
+    """An open multi-tenant stream scenario: one :class:`TenantMix`
+    streamed through every policy, per seed.
+
+    Unlike the closed :class:`Scenario` grids (one app × one rate × one
+    budget interval per cell), an online cell is the *merged* stream —
+    heterogeneous apps, imported traces, bursty/diurnal arrivals and
+    per-tenant QoS budget classes — with the first ``warmup_s`` of
+    arrivals excluded from the metrics (cold-start truncation).
+    """
+
+    name: str
+    description: str
+    mix: TenantMix
+    policies: Tuple[str, ...]
+    seeds: Tuple[int, ...]
+    warmup_s: float = 0.0
+    ebpsm_budget_met_floor: float = 0.0
+
+    @property
+    def n_workload_cells(self) -> int:
+        return len(self.seeds)
+
+    @property
+    def n_cells(self) -> int:
+        return self.n_workload_cells * len(self.policies)
+
+    @property
+    def n_workflows(self) -> int:
+        return self.mix.n_workflows
+
+
+# The CI-gated smoke mix: three tenants spanning all four workload axes —
+# synthetic + imported-trace apps, three arrival processes, three QoS
+# classes — small enough for the exp-smoke job (< 60 s, see ci.yml).
+ONLINE_SMOKE_MIX = TenantMix((
+    Tenant("astro-survey", GOLD,
+           apps=("montage", "trace:montage-18"),
+           arrival=Poisson(10.0), n_workflows=24, sizes=("small",)),
+    Tenant("bio-lab", SILVER,
+           apps=("epigenome", "trace:epigenomics-20"),
+           arrival=Diurnal(4.0, 14.0, period_s=300.0),
+           n_workflows=16, sizes=("small",)),
+    Tenant("seismo-batch", BRONZE,
+           apps=("sipht", "trace:seismology-9"),
+           arrival=MarkovModulated(2.0, 20.0, mean_dwell_s=60.0),
+           n_workflows=24, sizes=("small",)),
+))
+
+# The heavy mix: every Table-1 family plus all bundled traces, higher
+# rates, staggered tenant onboarding — the intended stress consumer.
+ONLINE_HEAVY_MIX = TenantMix((
+    Tenant("astro-survey", GOLD,
+           apps=("montage", "cybershake", "trace:montage-18"),
+           arrival=Poisson(12.0), n_workflows=40,
+           sizes=("small", "medium")),
+    Tenant("bio-lab", GOLD,
+           apps=("epigenome", "trace:epigenomics-20"),
+           arrival=Diurnal(4.0, 16.0, period_s=1800.0),
+           n_workflows=30, sizes=("small", "medium")),
+    Tenant("grav-obs", SILVER,
+           apps=("ligo",),
+           arrival=MarkovModulated(2.0, 20.0, mean_dwell_s=120.0),
+           n_workflows=30, sizes=("small", "medium")),
+    Tenant("seismo-batch", BRONZE,
+           apps=("sipht", "trace:seismology-9"),
+           arrival=MarkovModulated(1.0, 24.0, mean_dwell_s=90.0),
+           n_workflows=40, sizes=("small",)),
+    Tenant("late-joiner", BRONZE,
+           apps=("montage", "sipht"),
+           arrival=Poisson(8.0), n_workflows=20, sizes=("small",),
+           start_ms=120_000),
+))
+
+ONLINE_SCENARIOS: Dict[str, OnlineScenario] = {
+    "online-smoke": OnlineScenario(
+        name="online-smoke",
+        description=("CI-sized open-stream mix: 3 tenants (gold/silver/"
+                     "bronze QoS) x {Poisson, diurnal, bursty MMPP} "
+                     "arrivals x {synthetic, DAX-trace, WfCommons-trace} "
+                     "apps, all 5 policies, warm-up truncated."),
+        mix=ONLINE_SMOKE_MIX,
+        policies=ALL_POLICY_NAMES,
+        seeds=(0,),
+        warmup_s=30.0,
+        ebpsm_budget_met_floor=0.85,
+    ),
+    "online-heavy": OnlineScenario(
+        name="online-heavy",
+        description=("Stress open-stream mix: 5 tenants, 160 workflows, "
+                     "bursty/diurnal arrivals, staggered onboarding, "
+                     "mixed sizes — the autoscaling/admission-control "
+                     "testbed."),
+        mix=ONLINE_HEAVY_MIX,
+        policies=("EBPSM", "MSLBL_MW"),
+        seeds=(0, 1),
+        warmup_s=120.0,
+        ebpsm_budget_met_floor=0.60,
+    ),
+}
+
+AnyScenario = Union[Scenario, OnlineScenario]
+
+
+def get_scenario(name: str) -> AnyScenario:
+    if name in SCENARIOS:
         return SCENARIOS[name]
-    except KeyError:
-        raise SystemExit(
-            f"unknown grid {name!r}; choose from {sorted(SCENARIOS)}"
-        ) from None
+    if name in ONLINE_SCENARIOS:
+        return ONLINE_SCENARIOS[name]
+    raise SystemExit(
+        f"unknown grid {name!r}; choose from "
+        f"{sorted(SCENARIOS) + sorted(ONLINE_SCENARIOS)}"
+    )

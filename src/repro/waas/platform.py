@@ -15,14 +15,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core import budget as budget_mod
 from ..core.engine import SimEngine
 from ..core.jax_engine import (BatchSimEngine, GridMember,
                                predistribute_workload)
 from ..core.scheduler import ALL_POLICIES, EBPSM, MSLBL_MW, Policy
 from ..core.types import PlatformConfig, SimResult, Workflow, clone_workload
 from ..exp.metrics import CellMetrics, format_row
+from ..tenants import QoSClass, Tenant, TenantMix, assign_budgets_uniform
 from . import mljobs, slices
+
+# The ML bridge's service class: budgets drawn from the upper 85% of each
+# job's [min_cost, max_cost] range (the historical assign_budgets default).
+ML_QOS = QoSClass("ml", (0.15, 1.0), 1)
 
 
 @dataclasses.dataclass
@@ -68,10 +72,29 @@ class PlatformReport:
 
 def assign_budgets(cfg: PlatformConfig, wfs: Sequence[Workflow],
                    seed: int = 0, lo: float = 0.15, hi: float = 1.0) -> None:
-    rng = np.random.default_rng(seed)
-    for wf in wfs:
-        cmin, cmax = budget_mod.min_max_workflow_cost(cfg, wf)
-        wf.budget = cmin + rng.uniform(lo, hi) * (cmax - cmin)
+    """Uniform budget draw — delegates to the shared
+    :func:`repro.tenants.assign_budgets_uniform` code path."""
+    assign_budgets_uniform(cfg, wfs, np.random.default_rng(seed), lo, hi)
+
+
+def ml_tenant(n_jobs: int, rate: float, art_dir: str = "artifacts/dryrun",
+              name: str = "ml-tenant", qos: QoSClass = ML_QOS) -> Tenant:
+    """The ML-job stream as a :class:`repro.tenants.Tenant` — the one
+    workload-construction path shared with the exp harness.  A
+    single-tenant mix reproduces the legacy ``ml_workload`` +
+    ``assign_budgets`` construction draw-for-draw (tenant 0 keeps the
+    caller's seed)."""
+    return Tenant(
+        name=name, qos=qos, n_workflows=n_jobs,
+        stream=lambda n, s: mljobs.ml_workload(n, rate, seed=s,
+                                               art_dir=art_dir))
+
+
+def ml_stream(cfg: PlatformConfig, n_jobs: int, rate: float, seed: int,
+              art_dir: str = "artifacts/dryrun") -> List[Workflow]:
+    """Build the budgeted ML workload through :class:`TenantMix`."""
+    mix = TenantMix((ml_tenant(n_jobs, rate, art_dir),))
+    return mix.build(cfg, seed).workflows
 
 
 def run_platform(wfs: Sequence[Workflow], policy: Policy,
@@ -94,8 +117,7 @@ def compare_policies(n_jobs: int = 40, rate: float = 2.0, seed: int = 0,
     cfg = slices.platform_config()
     reports = []
     for pol in policies:
-        wfs = mljobs.ml_workload(n_jobs, rate, seed=seed, art_dir=art_dir)
-        assign_budgets(cfg, wfs, seed=seed)
+        wfs = ml_stream(cfg, n_jobs, rate, seed, art_dir)
         reports.append(run_platform(wfs, pol, cfg, seed=seed))
     return reports
 
@@ -119,8 +141,7 @@ def sweep(n_jobs: int = 24, rates: Sequence[float] = (1.0, 4.0),
     pre: List[Dict[int, float]] = []
     for rate in rates:
         for s in seeds:
-            wfs = mljobs.ml_workload(n_jobs, rate, seed=s, art_dir=art_dir)
-            assign_budgets(cfg, wfs, seed=s)
+            wfs = ml_stream(cfg, n_jobs, rate, s, art_dir)
             # One arrival-time budget distribution per budget mode; every
             # policy member clones the distributed prototype.
             protos = {}
@@ -156,8 +177,7 @@ def straggler_experiment(n_jobs: int = 30, rate: float = 2.0, seed: int = 0,
             cfg = slices.platform_config(
                 cpu_degradation_mean=dmax / 2, cpu_degradation_std=0.01,
                 cpu_degradation_max=dmax)
-            wfs = mljobs.ml_workload(n_jobs, rate, seed=seed, art_dir=art_dir)
-            assign_budgets(cfg, wfs, seed=seed)
+            wfs = ml_stream(cfg, n_jobs, rate, seed, art_dir)
             rep = run_platform(wfs, pol, cfg, seed=seed)
             rows.append((dmax, rep.mean_makespan_s, rep.budget_met))
         out[pol.name] = rows

@@ -23,6 +23,7 @@ from the (unpublished-seed) WorkflowGenerator, so EXPERIMENTS.md validates
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Callable, Dict, List, Tuple
 
@@ -275,6 +276,61 @@ def sipht(wid: int, n: int, rng: np.random.Generator) -> Workflow:
     spec.append((s4, o4, 0.0))             # sRNA annotate
     edges.append((srna, annot))
     return _build(wid, "sipht", spec, edges)
+
+
+# ---------------------------------------------------------------------------
+# Trace-import calibration (consumed by tenants.traces).
+#
+# Real traces record *runtimes in seconds* on some reference host and
+# *file sizes in bytes*; the simulator wants MI and MB on the Table-2
+# catalogue.  Per-family calibration maps trace seconds → MI at a
+# reference-machine MIPS chosen so imported workflows land in the same
+# magnitude band as the synthetic Table-1 generators above (e.g. Montage
+# runtimes are short/I-O bound, Epigenome map stages are CPU hogs), and
+# scales byte volumes to the family's I/O class.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceCalibration:
+    """Reference-host calibration for one workflow family."""
+
+    mips: float = 4.0        # MI per traced runtime second (≈ "medium")
+    mb_scale: float = 1.0    # multiplier on trace MB volumes
+
+
+TRACE_CALIBRATION: Dict[str, TraceCalibration] = {
+    # Montage: I/O heavy, short CPU — traced on a slow reference host.
+    "montage": TraceCalibration(mips=2.0, mb_scale=1.0),
+    # CyberShake: very high CPU and data.
+    "cybershake": TraceCalibration(mips=8.0, mb_scale=1.0),
+    # Epigenome: CPU-bound chains (map ≈ hundreds of seconds).
+    "epigenome": TraceCalibration(mips=4.0, mb_scale=1.0),
+    # LIGO Inspiral: medium CPU, high I/O.
+    "ligo": TraceCalibration(mips=4.0, mb_scale=1.0),
+    # SIPHT: low everything.
+    "sipht": TraceCalibration(mips=4.0, mb_scale=1.0),
+}
+
+DEFAULT_TRACE_CALIBRATION = TraceCalibration()
+
+# Substring hints mapping trace names / DAX namespaces / WfCommons
+# application ids onto the five Table-1 families.
+TRACE_FAMILY_HINTS: Dict[str, str] = {
+    "montage": "montage",
+    "cybershake": "cybershake",
+    "epigenom": "epigenome",       # epigenome / epigenomics / genome-seq
+    "genome": "epigenome",
+    "ligo": "ligo",
+    "inspiral": "ligo",
+    "sipht": "sipht",
+    "srna": "sipht",
+}
+
+
+def trace_calibration(family: str) -> TraceCalibration:
+    """Calibration for a (possibly unknown) family name."""
+    return TRACE_CALIBRATION.get(family, DEFAULT_TRACE_CALIBRATION)
 
 
 APP_GENERATORS: Dict[str, Callable[[int, int, np.random.Generator], Workflow]] = {

@@ -21,6 +21,23 @@ from .dax import APP_NAMES, generate_workflow
 SIZE_CLASSES = {"small": 50, "medium": 100, "large": 1000}
 
 
+def assign_budgets_uniform(
+    cfg: PlatformConfig,
+    wfs: Sequence[Workflow],
+    rng: np.random.Generator,
+    lo: float,
+    hi: float,
+) -> None:
+    """Draw each workflow's soft budget uniformly from the ``[lo, hi]``
+    slice of its ``[min_cost, max_cost]`` range — THE budget-assignment
+    path (§5 workload construction), shared by the closed-grid workloads
+    below, the tenant mixes (``repro.tenants``), and
+    ``waas.platform.assign_budgets``."""
+    for wf in wfs:
+        cmin, cmax = budget_mod.min_max_workflow_cost(cfg, wf)
+        wf.budget = cmin + rng.uniform(lo, hi) * (cmax - cmin)
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     n_workflows: int = 100
@@ -66,9 +83,8 @@ def generate_workload(
         size = SIZE_CLASSES[spec.sizes[int(rng.integers(len(spec.sizes)))]]
         wf = generate_workflow(app, wid, size, rng)
         wf.arrival_ms = int(t)
-        lo, hi = budget_mod.min_max_workflow_cost(cfg, wf)
-        u = rng.uniform(spec.budget_lo, spec.budget_hi)
-        wf.budget = lo + u * (hi - lo)
+        assign_budgets_uniform(cfg, [wf], rng,
+                               spec.budget_lo, spec.budget_hi)
         out.append(wf)
         t += rng.exponential(inter_ms)
     return out

@@ -175,3 +175,113 @@ def test_run_grid_workers_matches_serial():
     assert par["cells"] == serial["cells"]
     assert par["summary_by_policy"] == serial["summary_by_policy"]
     assert par["dispatch"] == serial["dispatch"]
+
+
+# ---------------------------------------------------------------------------
+# Online (open-stream) scenarios — repro.tenants harness
+# ---------------------------------------------------------------------------
+
+from repro.exp.scenarios import ONLINE_SCENARIOS, OnlineScenario  # noqa: E402
+from repro.tenants import GOLD, SILVER, Poisson, Tenant, TenantMix  # noqa: E402
+
+TINY_ONLINE = OnlineScenario(
+    name="unit-online-tiny",
+    description="unit-test online stream",
+    mix=TenantMix((
+        Tenant("a", GOLD, apps=("montage", "trace:montage-18"),
+               arrival=Poisson(10.0), n_workflows=4),
+        Tenant("b", SILVER, apps=("trace:seismology-9",),
+               arrival=Poisson(6.0), n_workflows=3),
+    )),
+    policies=("EBPSM", "MSLBL_MW"),
+    seeds=(0,),
+    warmup_s=5.0,
+    ebpsm_budget_met_floor=0.0,
+)
+
+
+def test_online_registry():
+    for name in ("online-smoke", "online-heavy"):
+        sc = exp_run.get_scenario(name)
+        assert isinstance(sc, OnlineScenario)
+        assert sc.n_cells == len(sc.seeds) * len(sc.policies)
+        assert sc.mix.n_workflows > 0
+    assert ONLINE_SCENARIOS["online-smoke"].warmup_s > 0
+    # Closed grids still resolve to Scenario.
+    assert isinstance(exp_run.get_scenario("paper-smoke"), Scenario)
+
+
+def test_run_online_end_to_end(tmp_path):
+    art = exp_run.run_online(TINY_ONLINE)
+    assert art["bench"] == "paper_grid"          # same artifact schema
+    assert art["scenario_kind"] == "online"
+    assert art["warmup_s"] == 5.0
+    assert len(art["cells"]) == TINY_ONLINE.n_cells == 2
+    assert [t["name"] for t in art["tenants"]] == ["a", "b"]
+    for row in art["cells"]:
+        assert row["app"] == "mixed"
+        assert row["n_workflows"] + row["n_warmup_excluded"] == 7
+        # Per-tenant extensions present and sane.
+        assert set(row["by_tenant"]) <= {"a", "b"}
+        assert set(row["by_qos"]) <= {"gold", "silver"}
+        assert row["p95_slowdown"] >= row["p50_slowdown"] > 0
+        assert 0 < row["jain_fairness"] <= 1.0 + 1e-9
+        assert row["peak_vms"] > 0
+        assert row["mean_fleet_vms"] > 0
+        for stats in row["by_tenant"].values():
+            assert stats["n"] > 0
+            assert stats["p95_slowdown"] >= stats["p50_slowdown"]
+    # Round-trips through the shared report writer + floor gate.
+    mpath = tmp_path / "paper_grid.md"
+    exp_run.write_report(art, str(mpath))
+    assert "mixed" in mpath.read_text()
+    assert exp_run.check_floors(art) == []
+
+
+def test_run_online_is_deterministic():
+    a = exp_run.run_online(TINY_ONLINE)
+    b = exp_run.run_online(TINY_ONLINE)
+    ka = [{k: v for k, v in row.items()} for row in a["cells"]]
+    kb = [{k: v for k, v in row.items()} for row in b["cells"]]
+    assert ka == kb
+
+
+def test_online_warmup_truncation_counts():
+    no_warm = OnlineScenario(
+        name="t", description="t", mix=TINY_ONLINE.mix,
+        policies=("EBPSM",), seeds=(0,), warmup_s=0.0)
+    art = exp_run.run_online(no_warm)
+    row = art["cells"][0]
+    assert row["n_warmup_excluded"] == 0
+    assert row["n_workflows"] == 7
+
+
+def test_check_floors_rejects_empty_post_warmup_cells():
+    """A warm-up window that swallows the whole stream must fail the
+    gate loudly, not pass vacuously with budget_met=1.0."""
+    all_warm = OnlineScenario(
+        name="t", description="t", mix=TINY_ONLINE.mix,
+        policies=("EBPSM",), seeds=(0,), warmup_s=1e6,
+        ebpsm_budget_met_floor=0.5)
+    art = exp_run.run_online(all_warm)
+    assert art["cells"][0]["n_workflows"] == 0
+    fails = exp_run.check_floors(art)
+    assert fails and "no post-warmup workflows" in fails[0]
+
+
+def test_warmup_truncates_tier_hist_too():
+    """tier_hist must count only placements made by post-warmup
+    workflows — cold-start placements are excluded from every metric."""
+    from repro.exp.metrics import CellMetrics
+    wl = generate_workload(CFG, WorkloadSpec(
+        n_workflows=6, arrival_rate_per_min=2.0, sizes=("small",),
+        seed=5, budget_lo=0.5, budget_hi=1.0))
+    eng = SimEngine(CFG, EBPSM, wl, seed=0, trace=True)
+    res = eng.run()
+    cut = wl[3].arrival_ms           # exclude the first three arrivals
+    m = CellMetrics.from_result("EBPSM", res, eng.trace_rows,
+                                warmup_ms=cut)
+    kept = [w for w in res.workflows if w.arrival_ms >= cut]
+    assert m.n_warmup_excluded == 6 - len(kept) > 0
+    assert sum(m.tier_hist.values()) == \
+        sum(wl[w.wid].n_tasks for w in kept)

@@ -175,3 +175,39 @@ def test_all_tasks_complete_batch():
         for w in e.result.workflows:
             assert w.finish_ms >= w.arrival_ms
             assert w.cost > 0
+
+
+def test_online_mixed_tenant_stream_parity():
+    """Bit-exact parity on an open multi-tenant stream (repro.tenants):
+    heterogeneous apps incl. imported DAX/WfCommons traces, three arrival
+    processes, per-QoS budgets — batched forced on, trace-row exact, with
+    the predistributed-budget path the online harness uses."""
+    from repro.core.jax_engine import predistribute_workload
+    from repro.core.types import clone_workload
+    from repro.tenants import (BRONZE, GOLD, SILVER, Diurnal,
+                               MarkovModulated, Poisson, Tenant, TenantMix)
+
+    mix = TenantMix((
+        Tenant("astro", GOLD, apps=("montage", "trace:montage-18"),
+               arrival=Poisson(10.0), n_workflows=5),
+        Tenant("bio", SILVER, apps=("trace:epigenomics-20",),
+               arrival=Diurnal(4.0, 14.0, period_s=240.0), n_workflows=3),
+        Tenant("seis", BRONZE, apps=("sipht", "trace:seismology-9"),
+               arrival=MarkovModulated(2.0, 18.0, mean_dwell_s=45.0),
+               n_workflows=5),
+    ))
+    tw = mix.build(CFG, seed=0)
+    for policy in (EBPSM, EBPSM_NC, MSLBL_MW):
+        ref_eng = SimEngine(CFG, policy, clone_workload(tw.workflows),
+                            seed=0, trace=True)
+        ref = ref_eng.run()
+        proto, spares = predistribute_workload(CFG, tw.workflows,
+                                               policy.budget_mode)
+        eng = BatchSimEngine(CFG, [(policy, clone_workload(proto), 0)],
+                             trace=True, batched=True,
+                             predistributed=[spares])
+        res = eng.run()[0]
+        assert_same(ref, res)
+        assert eng.states[0].trace_rows == ref_eng.trace_rows
+        assert res.peak_vms == ref.peak_vms
+        assert res.mean_fleet_vms == ref.mean_fleet_vms
