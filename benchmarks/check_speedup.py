@@ -10,6 +10,11 @@
   legacy (PR 3-style) mode by the grid floor, and the aggregate-round
   auction must demonstrably engage (``batched_calls > 0`` with at least
   one auctioned member below the old per-member 2048-pair threshold).
+  When the artifact carries a ``redistribution`` block, the Algorithm-3
+  share of wall on the heavy calibration cell must stay under
+  ``--redist-ceiling`` (it was ~0.45 before the array path), and the
+  array path must hold bit-exact parity with the scalar oracle on the
+  A/B sub-cell.
 
 Exit non-zero when an artifact is missing, a speedup regressed below its
 floor, or a structural check failed.  The default floors leave headroom
@@ -29,6 +34,11 @@ DEFAULT_GRID_PATH = "artifacts/bench/BENCH_grid_wall.json"
 # Workers-vs-legacy on a 2-core runner tracks ~2.2-2.5x locally; the CI
 # floor tolerates slow shared runners.  Serial-vs-legacy tracks ~1.3x.
 DEFAULT_GRID_FLOOR = 1.25
+# Algorithm-3 redistribution share of wall on the heavy calibration
+# cell.  Tracks ~0.18 locally (from ~0.45 scalar-only); shares are
+# ratios of same-process walls, so they travel across machines far
+# better than absolute times.
+DEFAULT_REDIST_CEILING = 0.20
 
 
 def _check_makespan(path: pathlib.Path, floor: float) -> None:
@@ -49,8 +59,33 @@ def _check_makespan(path: pathlib.Path, floor: float) -> None:
         )
 
 
+def _check_redistribution(art: dict, ceiling: float) -> None:
+    rd = art.get("redistribution")
+    if not rd:
+        print("redistribution block absent; share ceiling skipped")
+        return
+    share = float(rd["heavy"]["share"])
+    parity = bool(rd.get("parity_bit_exact", False))
+    print(
+        f"redistribute share {share:.4f} (ceiling {ceiling}) on "
+        f"{rd['heavy']['n_workflows']}-wf heavy cell "
+        f"(pre-array reference "
+        f"{rd.get('pre_array_reference', {}).get('share', 'n/a')}); "
+        f"array-vs-scalar parity={parity}, "
+        f"round coalesce={rd.get('round_coalesce_ratio', 0):.2f}"
+    )
+    if not parity:
+        sys.exit("FAIL: array-path Algorithm 3 lost bit-exact parity "
+                 "with the scalar oracle")
+    if share >= ceiling:
+        sys.exit(
+            f"FAIL: redistribute_share_of_wall {share:.4f} at or above "
+            f"ceiling {ceiling}"
+        )
+
+
 def _check_grid_wall(path: pathlib.Path, floor: float,
-                     required: bool) -> None:
+                     required: bool, redist_ceiling: float) -> None:
     if not path.exists():
         if required:
             sys.exit(f"missing grid-wall artifact: {path}")
@@ -80,6 +115,7 @@ def _check_grid_wall(path: pathlib.Path, floor: float,
         sys.exit("FAIL: no auctioned member below the legacy per-member "
                  "2048-pair threshold — the aggregate dispatcher is not "
                  "doing its job")
+    _check_redistribution(art, redist_ceiling)
 
 
 def main() -> None:
@@ -91,11 +127,15 @@ def main() -> None:
     ap.add_argument("--require-grid", action="store_true",
                     help="fail (rather than skip) when the grid-wall "
                          "artifact is missing")
+    ap.add_argument("--redist-ceiling", type=float,
+                    default=DEFAULT_REDIST_CEILING,
+                    help="max Algorithm-3 redistribute share of wall on "
+                         "the heavy calibration cell")
     args = ap.parse_args()
 
     _check_makespan(pathlib.Path(args.path), args.floor)
     _check_grid_wall(pathlib.Path(args.grid_path), args.grid_floor,
-                     args.require_grid)
+                     args.require_grid, args.redist_ceiling)
     print("benchmark gate OK")
 
 

@@ -13,9 +13,35 @@ All per-(task, VM type) estimates are read from the precomputed
 shared across clones and both engines) instead of per-call scalar cost
 evaluation — Algorithm 3's per-finish redistribution, the shared hot path
 of both engines, reduces to indexed table reads.
+
+Algorithm 3 has two implementations that must stay bit-exact with each
+other (gated by ``tests/test_redistribute.py``):
+
+* :func:`update_budget` — the scalar reference (sort, pool, sweep);
+* :func:`update_budget_fast` — the array path: a per-workflow
+  :class:`RedistState` keeps the estimated execution order ``S`` as an
+  index array plus an unscheduled *mask*, so each per-finish call is a
+  mask compress + table gathers + the bulk SFTD sweep
+  (:func:`_bulk_sweep`) instead of a Python sort and per-tier rescan.
+
+Tuning knobs (see the README "Tuning knobs" table):
+
+* ``REPRO_SCALAR_REDIST=1`` — force the scalar :func:`update_budget`
+  oracle on the engine hot path (read at import into
+  ``_ARRAY_REDIST``); the array path is the default.
+* ``_PY_DISTRIBUTE_MAX`` (=64) — subsets at or below this size take the
+  pure-Python distribution path on *both* implementations; the cutover
+  is bit-invisible.
+
+The round-batched redistribution mode (``redistribute="round"`` on the
+engines) banks per-finish surpluses and flushes them through
+:func:`update_budget_pooled` once per workflow per scheduling cycle —
+semantics-changing (surplus flows coalesce), so it is opt-in and
+A/B-gated rather than bit-parity-gated (see docs/PROFILING.md).
 """
 from __future__ import annotations
 
+import os as _os
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -416,6 +442,474 @@ def update_budget(
         return distribute_budget(cfg, wf, pool, task_ids=order,
                                  presorted=True)
     return pool
+
+
+# ---------------------------------------------------------------------------
+# Array-path Algorithm 3 (the engine hot path)
+# ---------------------------------------------------------------------------
+
+# REPRO_SCALAR_REDIST=1 forces the scalar update_budget reference on the
+# engine hot path — the oracle knob for parity tests and bisection, the
+# exact analogue of scheduler.py's REPRO_SCALAR_SELECT.
+_ARRAY_REDIST = _os.environ.get("REPRO_SCALAR_REDIST") != "1"
+
+
+class RedistState:
+    """Live per-workflow state for the array-path Algorithm 3.
+
+    The scalar :func:`update_budget` pays three per-call costs that scale
+    with the unscheduled count ``U``: sorting the engine's raw set into
+    rank order, gathering the pool from task attributes, and the per-tier
+    SFTD rescan.  This state removes the first two: the estimated
+    execution order ``S`` is stored once as an index array, scheduling
+    only ever *clears* mask bits (:meth:`mark_scheduled`), so the
+    rank-ordered unscheduled rows are a boolean compress; and
+    ``budget_vec`` mirrors every task's current sub-budget as float64 so
+    the pool gather is one fancy index (summed in the scalar reference's
+    exact order — see :func:`update_budget_fast`).
+
+    Because the row set only changes at :meth:`mark_scheduled`, every
+    pure function of the rows is memoized between scheduling events —
+    the compress itself, the cheapest-column gather and its cumulative
+    sum (pass 1 of Algorithm 1 depends on the pool only through two
+    scalars), the ``[U, K]`` tier slice, and a running ``top_sum`` that
+    turns the "everyone tops out" screen into two flops (the cached sum
+    drifts from the exact reduction by at most ~n·eps, which the
+    screen's margin dominates — it only ever errs toward running the
+    exact check).  A typical engine trace schedules a burst of tasks,
+    then redistributes across many finishes with the same row set, so
+    the caches hit on most calls.
+
+    Lives on the engine's per-workflow ``_WfState`` (never on the
+    :class:`Workflow` itself: structural-sharing clones share task lists
+    across grid members, while the mask/budget mirror is per-member
+    mutable state).
+    """
+
+    __slots__ = ("order_all", "pos_of", "mask", "budget_vec", "top_sum",
+                 "_top_list", "_rows", "_rows_list", "_want", "_cum",
+                 "_want_sum", "_tcr")
+
+    def __init__(self, cfg: PlatformConfig, wf: Workflow,
+                 unscheduled: Optional[Sequence[int]] = None):
+        ranks = wf.rank_cache
+        if ranks is None:
+            wf.rank_cache = ranks = [t.rank for t in wf.tasks]
+        n = wf.n_tasks
+        # Ranks are a permutation (execution_order assigns positions), so
+        # the stable argsort equals the scalar path's sorted(..., key=rank).
+        order = np.argsort(np.asarray(ranks, np.int64), kind="stable")
+        self.order_all = order                     # S: tids, rank-ascending
+        pos = np.empty(n, np.int64)
+        pos[order] = np.arange(n, dtype=np.int64)
+        self.pos_of = pos                          # tid -> position in S
+        if unscheduled is None:
+            self.mask = np.ones(n, bool)
+        else:
+            mask = np.zeros(n, bool)
+            pos_l = pos.tolist()
+            for tid in unscheduled:
+                mask[pos_l[tid]] = True
+            self.mask = mask
+        self.budget_vec = np.array([t.budget for t in wf.tasks], np.float64)
+        self._rows = None
+        self._rows_list = None
+        self._want = None
+        self._cum = None
+        self._want_sum = 0.0
+        self._tcr = None
+        table = cost_tables.table_for(cfg, wf)
+        if table.tiers_monotone:
+            self._top_list = table.top_list
+            r = self.rows()
+            self.top_sum = float(table.top_arr[r].sum()) if r.size else 0.0
+        else:
+            self._top_list = None
+            self.top_sum = 0.0
+
+    def mark_scheduled(self, tid: int) -> None:
+        self.mask[self.pos_of[tid]] = False
+        self._rows = None
+        self._rows_list = None
+        self._want = None
+        self._cum = None
+        self._tcr = None
+        if self._top_list is not None:
+            self.top_sum -= self._top_list[tid]
+
+    def rows(self) -> np.ndarray:
+        """Unscheduled tids in rank order (the compress of S)."""
+        r = self._rows
+        if r is None:
+            r = self._rows = self.order_all[self.mask]
+        return r
+
+
+def update_budget_fast(
+    cfg: PlatformConfig,
+    wf: Workflow,
+    rs: RedistState,
+    finished_tid: int,
+    actual_cost: float,
+    spare_budget: float,
+) -> float:
+    """Array-path Algorithm 3 — bit-exact with :func:`update_budget`.
+
+    The pool is summed with the builtin over the gathered row budgets
+    (``tolist`` is value-preserving, and the rows are in rank order —
+    the identical float sequence the scalar reference reduces), the
+    headroom fold is the same scalar expression, and the redistribution
+    runs through :func:`_distribute_rows`, which replicates
+    :func:`distribute_budget` operation-for-operation.
+
+    One shortcut the scalar path lacks: a zero pool redistributed over
+    already-all-zero budgets is the identity (pass 1 allocates zero to
+    every row and the sweep never runs), so the call returns without
+    touching the tasks — the common steady state of debt-heavy regimes.
+    """
+    rows = rs.rows()
+    if rows.size:
+        vals = rs.budget_vec[rows]
+        pool = sum(vals.tolist())
+    else:
+        pool = 0.0
+    headroom = wf.tasks[finished_tid].budget + spare_budget
+    if actual_cost <= headroom:
+        pool += headroom - actual_cost
+    else:
+        pool -= actual_cost - headroom
+    pool = max(pool, 0.0)
+    if not rows.size:
+        return pool
+    if pool == 0.0 and not vals.any():
+        return 0.0
+    return _distribute_rows(cfg, wf, rs, rows, pool, vals)
+
+
+def update_budget_pooled(
+    cfg: PlatformConfig,
+    wf: Workflow,
+    rs: RedistState,
+    surplus: float,
+    spare_budget: float,
+) -> float:
+    """Round-batched Algorithm 3 (array path): one redistribution for a
+    whole rendezvous round's worth of task-finish events.
+
+    ``surplus`` is the banked ``Σ (budget_f − actual_f)`` over the
+    coalesced finishes.  In exact arithmetic the chained per-finish
+    updates and this pooled form conserve the same money; in float they
+    differ (surplus flows reorder), which is why the mode is opt-in and
+    A/B-gated rather than parity-gated.  Bit-exact with
+    :func:`update_budget_pooled_scalar` (the oracle form).
+    """
+    rows = rs.rows()
+    if rows.size:
+        vals = rs.budget_vec[rows]
+        pool = sum(vals.tolist())
+    else:
+        pool = 0.0
+    pool += spare_budget + surplus
+    pool = max(pool, 0.0)
+    if not rows.size:
+        return pool
+    if pool == 0.0 and not vals.any():
+        return 0.0
+    return _distribute_rows(cfg, wf, rs, rows, pool, vals)
+
+
+def update_budget_pooled_scalar(
+    cfg: PlatformConfig,
+    wf: Workflow,
+    surplus: float,
+    spare_budget: float,
+    unscheduled: Sequence[int],
+) -> float:
+    """Scalar oracle for :func:`update_budget_pooled` (same pooled
+    semantics on the reference sort/sum/distribute path); the engine uses
+    it when ``REPRO_SCALAR_REDIST=1`` forces the scalar hot path."""
+    tasks = wf.tasks
+    if unscheduled:
+        ranks = wf.rank_cache
+        if ranks is None:
+            wf.rank_cache = ranks = [t.rank for t in tasks]
+        order = sorted(unscheduled, key=ranks.__getitem__)
+        pool = sum([tasks[tid].budget for tid in order])
+    else:
+        order = None
+        pool = 0.0
+    pool += spare_budget + surplus
+    pool = max(pool, 0.0)
+    if order:
+        return distribute_budget(cfg, wf, pool, task_ids=order,
+                                 presorted=True)
+    return pool
+
+
+def _distribute_rows(
+    cfg: PlatformConfig,
+    wf: Workflow,
+    rs: RedistState,
+    rows: np.ndarray,
+    budget: float,
+    old: Optional[np.ndarray] = None,
+) -> float:
+    """Algorithm 1 over the rank-ordered row array — the redistribution
+    core of the array path, bit-exact with
+    ``distribute_budget(..., task_ids=rows, presorted=True)``.
+
+    Small subsets delegate to the shared pure-Python path (identical
+    object); larger ones replicate the numpy branch: the same pass-1
+    cumulative reduction over the contiguous cheapest column (gathered
+    once per row set and memoized on ``rs``), the same
+    scalar-accumulated "everyone tops out" shortcut behind the cached
+    ``top_sum`` screen, and the SFTD sweep via :func:`_bulk_sweep`.
+    Also syncs ``rs.budget_vec`` with the written ``task.budget``
+    values.  ``old`` is the caller's already-gathered current row
+    budgets (skips re-gathering for the diff-only writeback).
+    """
+    table = cost_tables.table_for(cfg, wf)
+    tasks = wf.tasks
+    if rows.size <= _PY_DISTRIBUTE_MAX:
+        order = rs._rows_list
+        if order is None or len(order) != rows.size:
+            order = rs._rows_list = rows.tolist()
+        rem = _distribute_small(wf, table, budget, order)
+        rs.budget_vec[rows] = [tasks[tid].budget for tid in order]
+        return rem
+
+    if old is None:
+        old = rs.budget_vec[rows]
+
+    def writeback(new: np.ndarray) -> None:
+        # task.budget mirrors budget_vec by invariant, so only rows whose
+        # value moved need the (Python-priced) attribute write; the
+        # written floats are identical either way.
+        changed = np.flatnonzero(old != new)
+        if changed.size:
+            for tid, b in zip(rows[changed].tolist(),
+                              new[changed].tolist()):
+                tasks[tid].budget = b
+            rs.budget_vec[rows] = new
+    # Pass 1 — identical ops to distribute_budget's numpy branch
+    # (cheap_arr is a contiguous copy of est_full_cost[:, 0]).  The
+    # gather and its cumsum depend only on the row set, so they are
+    # memoized on the state; the pool enters through two scalars.
+    want = rs._want
+    if want is None:
+        want = rs._want = table.cheap_arr[rows]
+        rs._cum = np.cumsum(want)
+        rs._want_sum = float(want.sum())
+    cum = rs._cum
+    total_want = float(cum[-1])
+    if budget >= total_want + 1e-6 + 1e-12 * (abs(budget) + total_want):
+        # Fully funded with margin: every per-row ``budget − (cum−want)``
+        # provably rounds at or above ``want`` (the margin dwarfs the one
+        # subtraction's rounding), so pass 1 allocates exactly ``want``
+        # and the pairwise sum is the cached one.  Boundary cases fall
+        # through to the literal expression.
+        alloc = want.copy()
+        alloc_sum = rs._want_sum
+    else:
+        alloc = np.minimum(want, np.maximum(budget - (cum - want), 0.0))
+        alloc_sum = float(alloc.sum())
+    remaining = max(budget - alloc_sum, 0.0)
+
+    if remaining > 1e-9 and rs._top_list is not None:
+        # "Everyone tops out" shortcut.  The reference accumulates
+        # ``need`` with an exact scalar loop; the cached running
+        # ``top_sum`` gives a two-flop screen — when the remainder
+        # provably can't clear the exact need (the usual exhaustion
+        # regime), the loop and the shortcut are skipped without any
+        # observable difference, since the reference discards ``need``
+        # on a non-firing shortcut too.  The screen's error term covers
+        # the cached sum's drift (≤ ~n·eps relative) with orders of
+        # magnitude to spare, so it only errs toward running the loop.
+        need_est = rs.top_sum - alloc_sum
+        err = 1e-9 * (abs(rs.top_sum) + abs(alloc_sum) + 1.0)
+        if remaining > need_est - err + 1e-6:
+            # May fire: replicate the reference's exact accumulation
+            # order (top − give, row-ascending).
+            top_v = table.top_arr[rows]
+            need = 0.0
+            for t, g in zip(top_v.tolist(), alloc.tolist()):
+                need += t - g
+            if remaining > need + 1e-6:
+                remaining -= need
+                writeback(top_v)
+                return max(remaining, 0.0)
+    if remaining > 1e-9:
+        tcr = rs._tcr
+        if tcr is None:
+            tcr = rs._tcr = table.tier_cost[rows]
+        remaining = _bulk_sweep(table, tcr, alloc, remaining)
+    writeback(alloc)
+    return max(remaining, 0.0)
+
+
+def _discover_tiers(tcr: np.ndarray, alloc: np.ndarray, K: int):
+    """Current tier of each row: highest tier covered by the allocation
+    — the numpy reference branch's exact predicate.  Returns
+    ``(tier, alive)``."""
+    covered = alloc[:, None] >= tcr - 1e-9
+    any_cov = covered.any(axis=1)
+    highest = K - 1 - np.argmax(covered[:, ::-1], axis=1)
+    tier = np.where(any_cov, highest, 0)
+    return tier, np.flatnonzero(tier < K - 1)
+
+
+def _commit_candidates(ci: np.ndarray, cd: np.ndarray, remaining: float):
+    """Sequential paid checks over a sweep's boundary candidates,
+    vectorized where provable.  Returns ``(committed_positions,
+    remaining)`` with ``remaining`` advanced by the exact per-row chain.
+
+    The longest cumulative-sum prefix that provably fits commits in
+    bulk: before prefix candidate ``i`` the reference's remainder is at
+    least ``remaining − Σ_{j≤i} d_j`` up to the chain's accumulated
+    rounding, and the margin (the same shape as the sweep predicates)
+    dominates both that and the cumsum-vs-chain reassociation, so every
+    prefix check passes.  ``remaining`` still advances by the exact
+    subtraction chain.  The tail is then pre-filtered against the
+    post-prefix remainder — the remainder only decreases, so a tail
+    candidate already above it can never commit at its later visit —
+    and the few survivors run the reference's decision loop verbatim.
+    """
+    cum = np.cumsum(cd)
+    margin = 1e-6 + 1e-12 * (abs(remaining) + float(cum[-1])) * ci.size
+    m = int(np.searchsorted(cum, remaining - margin, side="right"))
+    if m:
+        for d in cd[:m].tolist():
+            remaining -= d
+        if m == ci.size:
+            return ci, remaining
+    tail_d = cd[m:]
+    keep = tail_d <= remaining + 1e-9
+    if not keep.any():
+        return ci[:m], remaining
+    commit: List[int] = []
+    for pos, d in zip(ci[m:][keep].tolist(), tail_d[keep].tolist()):
+        if 0 < d <= remaining + 1e-9:
+            remaining -= d
+            commit.append(pos)
+        # else: dead — the remainder shrank past it mid-sweep
+    if not commit:
+        return ci[:m], remaining
+    cp = np.asarray(commit, np.int64)
+    if m:
+        cp = np.concatenate([ci[:m], cp])
+    return cp, remaining
+
+
+def _bulk_sweep(table, tcr: np.ndarray, alloc: np.ndarray,
+                remaining: float) -> float:
+    """SFTD sweep, one whole sweep per step, mutating ``alloc`` in place.
+
+    The reference sweep visits rows in order, upgrading each by one tier
+    when the paid check ``0 < delta ≤ remaining + 1e-9`` passes, and
+    rescans until a sweep changes nothing.  Two vectorized regimes cover
+    it bit-exactly:
+
+    * **Guaranteed success** — the entry remainder exceeds the summed
+      paid deltas by a conservative margin (covering both the
+      pairwise-sum error of the total and the accumulated rounding of
+      the sequential chain), so *every* sequential paid check provably
+      passes: before row ``i`` the reference's remainder is at least
+      ``remaining − Σ_{j<i} d_j`` up to that rounding, which the margin
+      dominates.  Give/tier updates commit as array writes; ``remaining``
+      still advances by the exact per-row subtraction chain (the same
+      float sequence the reference executes), keeping the returned spare
+      bit-identical.
+
+    * **Exhaustion** — otherwise, a paid row whose delta exceeds even
+      the sweep-entry remainder can never succeed (the remainder only
+      decreases and a row's delta is fixed until its tier moves — the
+      same live-list argument as :func:`_distribute_small`): those rows
+      die permanently.  Free advances (``delta ≤ 0``) don't touch the
+      remainder and commit vectorized; the boundary candidates go
+      through :func:`_commit_candidates` (guaranteed prefix + exact
+      tail).
+
+    Monotone tier tables (the usual case) take a specialized iteration:
+    after discovery every delta is positive (the highest-covered tier
+    bounds the allocation strictly below the next tier's cost, and a
+    committed row lands exactly on a tier value), so the paid/free
+    bookkeeping collapses — zero deltas (duplicate adjacent tier costs)
+    are detected with one ``all()`` and routed to the generic step.
+    Discovery itself short-circuits when no row covers tier 1 (always
+    true right after pass 1 unless tier costs nearly coincide): every
+    row's highest covered tier is then 0, matching the reference's
+    ``where(any_cov, highest, 0)`` without the ``[n, K]`` scan.
+
+    A row that neither advanced nor died keeps its state and is
+    revisited next sweep, exactly like the reference rescan.
+    """
+    K = tcr.shape[1]
+    if K < 2:
+        return remaining
+    mono = table.tiers_monotone
+    if mono and not (alloc >= tcr[:, 1] - 1e-9).any():
+        # No row covers tier 1 ⇒ (monotone) none covers any higher tier
+        # ⇒ every row sits at tier 0 (covered there or not — the
+        # reference assigns 0 either way).
+        tier = np.zeros(alloc.size, np.int64)
+        alive = np.arange(alloc.size)
+    else:
+        tier, alive = _discover_tiers(tcr, alloc, K)
+    while remaining > 1e-9 and alive.size:
+        nxt = tcr[alive, tier[alive] + 1]
+        delta = nxt - alloc[alive]
+        if mono and delta.all():
+            # Monotone fast step: every row is a paid upgrade.
+            total = float(delta.sum())
+            margin = 1e-6 + 1e-12 * (abs(remaining) + total) * alive.size
+            if remaining > total + margin:
+                alloc[alive] = nxt
+                tier[alive] += 1
+                for d in delta.tolist():     # exact reference chain
+                    remaining -= d
+                alive = alive[tier[alive] < K - 1]
+                continue
+            ci = np.flatnonzero(delta <= remaining + 1e-9)
+            if not ci.size:
+                break                        # everyone died: fixed point
+            cp, remaining = _commit_candidates(ci, delta[ci], remaining)
+            if not cp.size:
+                break
+            rc = alive[cp]
+            alloc[rc] = nxt[cp]
+            tier[rc] += 1
+            alive = rc[tier[rc] < K - 1]
+            continue
+        # Generic step (non-monotone tables, or zero/negative deltas).
+        paid = delta > 0.0
+        pd = delta[paid]
+        total = float(pd.sum())
+        margin = 1e-6 + 1e-12 * (abs(remaining) + total) * alive.size
+        if remaining > total + margin:
+            # Guaranteed success: commit the whole sweep in bulk.
+            alloc[alive[paid]] = nxt[paid]
+            tier[alive] += 1                 # free rows advance too
+            for d in pd.tolist():            # exact reference chain
+                remaining -= d
+            alive = alive[tier[alive] < K - 1]
+            continue
+        advanced = ~paid                     # free rows always advance
+        if advanced.any():
+            tier[alive[advanced]] += 1
+        cand = paid & (delta <= remaining + 1e-9)
+        ci = np.flatnonzero(cand)
+        if ci.size:
+            cp, remaining = _commit_candidates(ci, delta[ci], remaining)
+            if cp.size:
+                rc = alive[cp]
+                alloc[rc] = nxt[cp]
+                tier[rc] += 1
+                advanced[cp] = True
+        if not advanced.any():
+            break                            # nothing changed: fixed point
+        alive = alive[advanced]
+        alive = alive[tier[alive] < K - 1]
+    return remaining
 
 
 def min_max_workflow_cost(cfg: PlatformConfig, wf: Workflow) -> tuple:

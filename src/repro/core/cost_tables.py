@@ -54,6 +54,12 @@ class CostTable:
     cost_bare: np.ndarray      # [T, V] f64 — PT only (no prov, no cont)
     by_speed: np.ndarray       # [V] i64 — type indices, ascending mips
     tier_cost: np.ndarray      # [T, V] f64 — est_full_cost in by_speed order
+    # Contiguous 1-D gather columns for the array-path Algorithm 3
+    # (``core.budget.update_budget_fast``): row gathers from a contiguous
+    # copy beat strided views on the per-finish hot path.  Values are the
+    # corresponding est_full_cost / tier_cost columns, bit-identical.
+    cheap_arr: np.ndarray      # [T] f64 — est_full_cost[:, 0] contiguous
+    top_arr: np.ndarray        # [T] f64 — tier_cost[:, -1] contiguous
     # Plain-Python mirrors (``tolist`` is value-preserving) for the
     # small-subset Algorithm 1/3 and scalar-select fast paths, where
     # per-call numpy dispatch overhead dwarfs the arithmetic.
@@ -130,6 +136,8 @@ def build_table(cfg: PlatformConfig, wf: Workflow) -> CostTable:
         cost_bare=billed(proc_ms),
         by_speed=by_speed,
         tier_cost=tier_cost,
+        cheap_arr=np.ascontiguousarray(est_full[:, 0]),
+        top_arr=np.ascontiguousarray(tier_cost[:, -1]),
         cheap_list=est_full[:, 0].tolist(),
         tier_list=tier_cost.tolist(),
         rt_list=rt_out_ms.tolist(),

@@ -67,11 +67,13 @@ def new_profile() -> Dict[str, float]:
     """Fresh per-phase counter block (seconds + call counts)."""
     return {
         "distribute_s": 0.0,      # Algorithm 1 / MSLBL arrival distribution
-        "redistribute_s": 0.0,    # Algorithm 3 per-finish redistribution
+        "redistribute_s": 0.0,    # Algorithm 3 redistribution (either mode)
         "select_s": 0.0,          # per-task scheduler.select calls
         "pipeline_s": 0.0,        # execution-pipeline math + cache updates
         "distributions": 0.0,
-        "redistributions": 0.0,
+        "redistributions": 0.0,       # Algorithm-3 distribute invocations
+        "redistribute_events": 0.0,   # task finishes feeding them (≥ above
+        #                               in round mode: events coalesce)
         "selects": 0.0,
     }
 
@@ -85,6 +87,13 @@ class _WfState:
     finish_ms: int = 0
     unscheduled: Set[int] = dataclasses.field(default_factory=set)
     pending_parents: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Array-path Algorithm 3 (core.budget.RedistState), built lazily at
+    # the first redistribution; None when the scalar oracle is forced.
+    redist: Optional[budget_mod.RedistState] = None
+    # Round-batched mode: surplus banked since the last flush, and the
+    # number of finish events it coalesces.
+    pending_surplus: float = 0.0
+    pending_events: int = 0
 
 
 @dataclasses.dataclass(slots=True)
@@ -112,15 +121,28 @@ class SimState:
         seed: int = 0,
         trace: bool = False,
         predistributed: Optional[Dict[int, float]] = None,
+        redistribute: str = "finish",
     ):
         """``predistributed``: wid → spare budget for workflows whose
         arrival-time budget distribution (Algorithm 1 / MSLBL) already ran
         on these task objects.  The distribution is deterministic in
         (cfg, workflow, budget) — policy- and seed-independent — so a grid
         engine computes it once per (workload, budget_mode) and shares the
-        result across members instead of recomputing per member."""
+        result across members instead of recomputing per member.
+
+        ``redistribute``: ``"finish"`` (default) runs Algorithm 3 once per
+        task finish — the paper's trigger, bit-exact with the scalar
+        reference; ``"round"`` banks each finish's surplus and runs one
+        pooled redistribution per workflow per scheduling cycle
+        (``flush_redistributions``) — surplus flows coalesce, so results
+        may differ in float; the A/B quality comparison lives in
+        ``benchmarks/bench_grid_wall.py``."""
+        if redistribute not in ("finish", "round"):
+            raise ValueError(f"redistribute={redistribute!r} "
+                             "(expected 'finish' or 'round')")
         self.cfg = cfg
         self.policy = policy
+        self.redistribute = redistribute
         self.workflows = list(workflows)
         self.predistributed = predistributed
         self.pool = VMPool(cfg)
@@ -266,19 +288,36 @@ class SimState:
         st.finish_ms = max(st.finish_ms, self.now)
         if self.policy.budget_mode == "mslbl":
             st.spare += task.budget - actual
-        elif self.profile is None:
-            st.spare = budget_mod.update_budget(
-                self.cfg, wf, tid, actual, st.spare, st.unscheduled
-            )
+        elif self.redistribute == "round":
+            # Round-batched Algorithm 3: bank the surplus; the pooled
+            # redistribution runs once per workflow per scheduling cycle
+            # (flush_redistributions), coalescing every finish in between.
+            st.pending_surplus += task.budget - actual
+            st.pending_events += 1
+            if self.profile is not None:
+                self.profile["redistribute_events"] += 1
         else:
-            # Algorithm 3: one redistribution per task finish — the
-            # dominant serial cost at paper scale (see ROADMAP).
-            t0 = _time.perf_counter()
-            st.spare = budget_mod.update_budget(
-                self.cfg, wf, tid, actual, st.spare, st.unscheduled
-            )
-            self.profile["redistribute_s"] += _time.perf_counter() - t0
-            self.profile["redistributions"] += 1
+            # Algorithm 3: one redistribution per task finish.  The array
+            # path (core.budget.RedistState) is bit-exact with the scalar
+            # reference, which REPRO_SCALAR_REDIST=1 forces back on.
+            prof = self.profile
+            t0 = _time.perf_counter() if prof is not None else 0.0
+            if budget_mod._ARRAY_REDIST:
+                rd = st.redist
+                if rd is None:
+                    rd = st.redist = budget_mod.RedistState(
+                        self.cfg, wf, st.unscheduled)
+                st.spare = budget_mod.update_budget_fast(
+                    self.cfg, wf, rd, tid, actual, st.spare
+                )
+            else:
+                st.spare = budget_mod.update_budget(
+                    self.cfg, wf, tid, actual, st.spare, st.unscheduled
+                )
+            if prof is not None:
+                prof["redistribute_s"] += _time.perf_counter() - t0
+                prof["redistributions"] += 1
+                prof["redistribute_events"] += 1
         # Release ready children.
         for c in task.children:
             st.pending_parents[c] -= 1
@@ -320,10 +359,46 @@ class SimState:
         for vm in self.pool.idle_vms():
             self.pool.terminate(vm, self.now)
 
+    # ---- round-batched Algorithm 3 (redistribute="round") --------------------
+    def flush_redistributions(self) -> None:
+        """Run the banked pooled redistribution of every workflow with a
+        task in the current ready queue — their sub-budgets are about to
+        be read by selection.  Workflows with banked surplus but nothing
+        queued keep coalescing until they queue again (or finalize)."""
+        if self.redistribute != "round" or not self.queue:
+            return
+        for wid in sorted({e[1] for e in self.queue}):
+            st = self.wf_state[wid]
+            if st.pending_events:
+                self._flush_wf(st)
+
+    def _flush_wf(self, st: _WfState) -> None:
+        prof = self.profile
+        t0 = _time.perf_counter() if prof is not None else 0.0
+        if budget_mod._ARRAY_REDIST:
+            rd = st.redist
+            if rd is None:
+                rd = st.redist = budget_mod.RedistState(
+                    self.cfg, st.wf, st.unscheduled)
+            st.spare = budget_mod.update_budget_pooled(
+                self.cfg, st.wf, rd, st.pending_surplus, st.spare
+            )
+        else:
+            st.spare = budget_mod.update_budget_pooled_scalar(
+                self.cfg, st.wf, st.pending_surplus, st.spare,
+                st.unscheduled
+            )
+        if prof is not None:
+            prof["redistribute_s"] += _time.perf_counter() - t0
+            prof["redistributions"] += 1
+        st.pending_surplus = 0.0
+        st.pending_events = 0
+
     # ---- scheduling cycles (Alg. 2) ------------------------------------------
     def sequential_cycle(self, idle: Optional[List[VM]] = None) -> None:
         """Per-task reference cycle: drain the ready queue in order, calling
         ``scheduler.select`` against the live idle pool for each task."""
+        self.flush_redistributions()
         idle = self.pool.idle_vms() if idle is None else idle
         while self.queue:
             est, wid, tid = heapq.heappop(self.queue)
@@ -355,6 +430,8 @@ class SimState:
                 used = max(0.0, placement.est_cost - task.budget)
                 st.spare -= min(used, max(st.spare, 0.0))
             st.unscheduled.discard(tid)
+            if st.redist is not None:
+                st.redist.mark_scheduled(tid)
             if placement.vm is not None:
                 vm = placement.vm
                 self.pool.mark_busy(vm)
@@ -377,6 +454,7 @@ class SimState:
         (task, app, owner_tag, inputs) rows the auction scores, the
         (wid, tid, inputs) metadata the commit step needs, and the
         per-task cost tables the auction's serial resolution reads."""
+        self.flush_redistributions()
         ordered = []
         while self.queue:
             ordered.append(heapq.heappop(self.queue))
@@ -415,6 +493,8 @@ class SimState:
                            table=cost_tables.table_for(self.cfg, st.wf),
                            pool=self.pool)
             st.unscheduled.discard(tid)
+            if st.redist is not None:
+                st.redist.mark_scheduled(tid)
             if p.vm is not None:
                 vm = p.vm
                 self.pool.mark_busy(vm)
@@ -535,6 +615,13 @@ class SimState:
         return peak, area / horizon
 
     def finalize(self, wall_s: float = 0.0) -> SimResult:
+        if self.redistribute == "round":
+            # Flush any still-banked surplus so spare/budget invariants
+            # hold post-run (results don't read budgets, but tests and
+            # conservation checks do).
+            for st in self.wf_state.values():
+                if st.pending_events:
+                    self._flush_wf(st)
         self.pool.finalize(self.now)
         peak_vms, mean_fleet = self._fleet_stats()
         results = [
@@ -578,13 +665,15 @@ class SimEngine(SimState):
         trace: bool = False,
         batched: object = "auto",
         predistributed: Optional[Dict[int, float]] = None,
+        redistribute: str = "finish",
     ):
         """``batched``: True / False / "auto" — use the JAX batched
         scheduling cycle (core.jax_cycles) when the queue×pool product is
         large.  EBPSM-family policies only; MSLBL mutates spare budget
         mid-cycle and stays sequential."""
         super().__init__(cfg, policy, workflows, seed=seed, trace=trace,
-                         predistributed=predistributed)
+                         predistributed=predistributed,
+                         redistribute=redistribute)
         self.batched = batched
 
     # ---- main loop -----------------------------------------------------------

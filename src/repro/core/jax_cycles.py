@@ -30,6 +30,15 @@ Two drivers consume the auction:
   (used by ``core.jax_engine.BatchSimEngine``): each round stacks every
   active member's proposal into one ``[B, T, V]`` tensor and scores it
   with a single vmapped kernel call.
+
+Tuning knobs (see the README "Tuning knobs" table): ``AUCTION_TAIL_PAIRS``
+(=192) drains a member's auction tail through per-task ``select`` once
+its remaining queue×pool product drops below it — identical outcomes
+(the fixed point *is* the sequential interleaving), it just stops paying
+per-round kernel dispatch for a handful of pairs.  The thresholds that
+decide whether a cycle rides this module at all
+(``AUCTION_MIN_PAIRS_ROUND``, legacy ``AUCTION_MIN_PAIRS_GRID``) live in
+``core.jax_engine``.
 """
 from __future__ import annotations
 

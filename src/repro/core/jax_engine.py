@@ -93,6 +93,7 @@ class BatchSimEngine:
         use_pallas: object = "auto",
         batched: object = "auto",
         predistributed: Optional[Sequence[Optional[Dict[int, float]]]] = None,
+        redistribute: str = "finish",
     ):
         """``batched``: False / True / "auto" / "member".
 
@@ -115,14 +116,22 @@ class BatchSimEngine:
 
         ``predistributed``: optional per-member wid → spare maps for
         workloads whose arrival-time budget distribution already ran (see
-        ``predistribute_workload`` / ``SimState``)."""
+        ``predistribute_workload`` / ``SimState``).
+
+        ``redistribute``: ``"finish"`` (default, per-task-finish Algorithm
+        3, bit-exact with ``SimEngine``) or ``"round"`` — each member
+        banks finish surpluses and redistributes once per workflow per
+        scheduling cycle, so all finish events inside one rendezvous
+        round coalesce into a single array call (shared ``SimState``
+        semantics: engine↔engine parity holds in both modes)."""
         self.cfg = cfg
         self.use_pallas = use_pallas
         self.batched = batched
+        self.redistribute = redistribute
         pre = predistributed or [None] * len(members)
         self.states = [
             SimState(cfg, policy, workflows, seed=seed, trace=trace,
-                     predistributed=p)
+                     predistributed=p, redistribute=redistribute)
             for (policy, workflows, seed), p in zip(members, pre)
         ]
         self.rounds = 0
@@ -225,6 +234,7 @@ class BatchSimEngine:
             hist[key] = hist.get(key, 0) + 1
         out: Dict[str, object] = {
             "rounds": self.rounds,
+            "redistribute_mode": self.redistribute,
             "batched_calls": self.batched_calls,
             "batched_cycles": self.batched_cycles,
             "serial_cycles": self.serial_cycles,
@@ -325,6 +335,7 @@ def simulate_batch(
     trace: bool = False,
     use_pallas: object = "auto",
     batched: object = "auto",
+    redistribute: str = "finish",
 ) -> BatchResult:
     """Evaluate the full grid policies × workloads × seeds in one batched
     engine run.
@@ -355,7 +366,8 @@ def simulate_batch(
                 labels.append((pol.name, wi, s))
                 pre.append(spares)
     engine = BatchSimEngine(cfg, members, trace=trace, use_pallas=use_pallas,
-                            batched=batched, predistributed=pre)
+                            batched=batched, predistributed=pre,
+                            redistribute=redistribute)
     results = engine.run()
     entries = [
         GridEntry(policy=name, workload=wi, seed=s, result=res)

@@ -92,6 +92,10 @@ def _merge_stats(parts: List[Dict]) -> Dict:
         if "profile" in s:
             profiles.append(s["profile"])
     out["min_member_pairs_batched"] = min(mins) if mins else 0
+    if parts:
+        # Uniform across parts — every engine in a run shares the mode.
+        out["redistribute_mode"] = parts[0].get("redistribute_mode",
+                                                "finish")
     if profiles:
         # REPRO_PROFILE=1 phase counters: sum the absolute seconds
         # (including the per-engine walls); the artifact assembler
@@ -111,6 +115,7 @@ def _grid_batch(
     trace: bool,
     use_pallas: object,
     batched: object,
+    redistribute: str = "finish",
 ) -> Tuple[List[Dict], Dict]:
     """Simulate one batch of workload cells × all scenario policies.
 
@@ -137,7 +142,8 @@ def _grid_batch(
             labels.append((cell, pol.name))
             pre.append(spares)
     engine = BatchSimEngine(cfg, members, trace=trace, predistributed=pre,
-                            use_pallas=use_pallas, batched=batched)
+                            use_pallas=use_pallas, batched=batched,
+                            redistribute=redistribute)
     results = engine.run()
     rows: List[Dict] = []
     for (cell, pol_name), res, st in zip(labels, results, engine.states):
@@ -162,6 +168,7 @@ def run_grid(
     workers: int = 1,
     use_pallas: object = "auto",
     batched: object = "auto",
+    redistribute: str = "finish",
     executor=None,
 ) -> Dict:
     """Run the whole grid; returns the artifact payload.
@@ -190,7 +197,8 @@ def run_grid(
         ex = executor or grid_executor(workers)
         try:
             futs = [ex.submit(_grid_batch, scenario, cfg, b, trace,
-                              use_pallas, batched) for b in batches]
+                              use_pallas, batched, redistribute)
+                    for b in batches]
             for i, f in enumerate(futs):
                 parts.append(f.result())
                 if verbose:
@@ -203,7 +211,7 @@ def run_grid(
     else:
         for batch in batches:
             parts.append(_grid_batch(scenario, cfg, batch, trace,
-                                     use_pallas, batched))
+                                     use_pallas, batched, redistribute))
             if verbose:
                 done = sum(len(p[0]) for p in parts)
                 print(f"  {done}/{scenario.n_cells} cells "
@@ -213,7 +221,7 @@ def run_grid(
     stats = _merge_stats([s for _, s in parts])
     return _artifact(scenario, rows, stats,
                      wall_s=time.perf_counter() - t0, workers=workers,
-                     use_pallas=use_pallas)
+                     use_pallas=use_pallas, redistribute=redistribute)
 
 
 def _artifact(scenario, rows: List[Dict], stats: Dict, wall_s: float,
@@ -257,6 +265,7 @@ def run_online(
     verbose: bool = False,
     use_pallas: object = "auto",
     batched: object = "auto",
+    redistribute: str = "finish",
 ) -> Dict:
     """Stream an :class:`OnlineScenario`'s tenant mix through the batched
     engine, one merged multi-tenant stream per seed × every policy.
@@ -292,7 +301,7 @@ def run_online(
             pre.append(spares)
         engine = BatchSimEngine(cfg, members, trace=trace,
                                 predistributed=pre, use_pallas=use_pallas,
-                                batched=batched)
+                                batched=batched, redistribute=redistribute)
         results = engine.run()
         for name, res, st in zip(labels, results, engine.states):
             m = CellMetrics.from_result(
@@ -315,6 +324,7 @@ def run_online(
     return _artifact(
         scenario, rows, _merge_stats(stats_parts),
         wall_s=time.perf_counter() - t0, workers=1, use_pallas=use_pallas,
+        redistribute=redistribute,
         scenario_kind="online",
         warmup_s=scenario.warmup_s,
         tenants=[{
@@ -431,6 +441,13 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="process-pool width for cell batches (cells are "
                          "independent; the full paper grid parallelizes "
                          "across cores)")
+    ap.add_argument("--redistribute", choices=("finish", "round"),
+                    default="finish",
+                    help="Algorithm-3 mode: per-task-finish (paper "
+                         "semantics, default) or round-batched (one "
+                         "pooled redistribution per workflow per "
+                         "scheduling cycle; coalesces surplus flows, "
+                         "A/B-gated — see docs/PROFILING.md)")
     ap.add_argument("--check-floors", action="store_true",
                     help="exit non-zero on budget-met floor / makespan-win "
                          "regressions")
@@ -447,14 +464,16 @@ def main(argv: Optional[List[str]] = None) -> None:
               f"{len(scenario.policies)} policies, "
               f"{scenario.n_workflows} workflows/stream, "
               f"warm-up {scenario.warmup_s:.0f}s)")
-        art = run_online(scenario, verbose=True)
+        art = run_online(scenario, verbose=True,
+                         redistribute=args.redistribute)
     else:
         print(f"grid {scenario.name}: {scenario.n_cells} cells "
               f"({scenario.n_workload_cells} workloads x "
               f"{len(scenario.policies)} policies)"
               + (f", {args.workers} workers" if args.workers > 1 else ""))
         art = run_grid(scenario, cells_per_batch=args.cells_per_batch,
-                       verbose=True, workers=args.workers)
+                       verbose=True, workers=args.workers,
+                       redistribute=args.redistribute)
 
     os.makedirs(args.out, exist_ok=True)
     jpath = os.path.join(args.out, ARTIFACT_NAME)

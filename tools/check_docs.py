@@ -1,0 +1,131 @@
+"""Docs link checker — CI gate for the docs layer.
+
+``python tools/check_docs.py [--root DIR]``
+
+Checks, for ``README.md``, ``ROADMAP.md`` and every ``docs/*.md``:
+
+* every relative markdown link ``[text](target)`` resolves to an
+  existing file (anchors are stripped; external ``http(s):``/``mailto:``
+  links are skipped — this repo's docs should work offline);
+* every backticked repo path that *looks* like a file reference
+  (``src/...``, ``docs/...``, ``tests/...``, ``benchmarks/...``,
+  ``tools/...``, ``.github/...``, ``artifacts/...`` with an extension)
+  points at a real file or directory.  Generated artifact paths
+  (``artifacts/...``) are exempt — they exist only after a bench run.
+
+``--run-quickstart`` additionally executes the README's quickstart
+snippets *as written* — the first fenced ``python`` block (the
+``simulate_batch`` grid example) and the first ``paper-smoke``
+command from a fenced ``bash`` block — so documentation drift breaks
+the docs CI job, not a user's first five minutes.  The link check
+itself stays dependency-free (stdlib only); the quickstart needs the
+pinned requirements installed.
+
+Exit non-zero with one line per broken reference.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+from typing import List
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# Backticked tokens that look like repo file paths: at least one slash,
+# a known top-level prefix, and an extension or trailing slash.
+PATH_RE = re.compile(
+    r"`((?:src|docs|tests|benchmarks|tools|\.github)/[\w\-./]+)`")
+
+DOC_GLOBS = ("README.md", "ROADMAP.md", "docs/*.md")
+
+
+def _targets(root: pathlib.Path) -> List[pathlib.Path]:
+    out: List[pathlib.Path] = []
+    for pat in DOC_GLOBS:
+        out.extend(sorted(root.glob(pat)))
+    return out
+
+
+def check_file(root: pathlib.Path, doc: pathlib.Path) -> List[str]:
+    errors: List[str] = []
+    text = doc.read_text()
+    rel = doc.relative_to(root)
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if (not target or target.startswith(("http://", "https://",
+                                            "mailto:"))):
+            continue
+        resolved = (doc.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{rel}: broken link -> {m.group(1)}")
+
+    for m in PATH_RE.finditer(text):
+        p = m.group(1).rstrip("/")
+        if not (root / p).exists():
+            errors.append(f"{rel}: referenced path missing -> {p}")
+
+    return errors
+
+
+def run_quickstart(root: pathlib.Path) -> None:
+    """Execute the README quickstart snippets verbatim."""
+    text = (root / "README.md").read_text()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+
+    py_blocks = re.findall(r"```python\n(.*?)```", text, re.S)
+    if not py_blocks:
+        sys.exit("README.md has no fenced python quickstart block")
+    print("== README python quickstart ==")
+    print(py_blocks[0].rstrip())
+    subprocess.run([sys.executable, "-c", py_blocks[0]], check=True,
+                   env=env, cwd=root)
+
+    bash_lines = [line.strip()
+                  for block in re.findall(r"```bash\n(.*?)```", text, re.S)
+                  for line in block.splitlines()]
+    cmd = next((line for line in bash_lines
+                if "paper-smoke" in line and "--check-floors" not in line),
+               None)
+    if cmd is None:
+        sys.exit("README.md has no paper-smoke quickstart command")
+    print(f"== README bash quickstart ==\n{cmd}")
+    subprocess.run(cmd, shell=True, check=True, env=env, cwd=root)
+    print("quickstart OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".",
+                    help="repo root (default: cwd)")
+    ap.add_argument("--run-quickstart", action="store_true",
+                    help="also execute the README quickstart snippets "
+                         "(needs the pinned requirements installed)")
+    args = ap.parse_args()
+    root = pathlib.Path(args.root).resolve()
+
+    docs = _targets(root)
+    if not docs:
+        sys.exit(f"no docs found under {root} ({', '.join(DOC_GLOBS)})")
+
+    errors: List[str] = []
+    for doc in docs:
+        errors.extend(check_file(root, doc))
+
+    for doc in docs:
+        print(f"checked {doc.relative_to(root)}")
+    if errors:
+        sys.exit("BROKEN DOC REFERENCES:\n  " + "\n  ".join(errors))
+    print(f"docs OK ({len(docs)} files, no broken references)")
+
+    if args.run_quickstart:
+        run_quickstart(root)
+
+
+if __name__ == "__main__":
+    main()
