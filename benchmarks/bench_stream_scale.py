@@ -1,0 +1,167 @@
+"""Open-stream member scaling: SoA pooled state vs the object baseline.
+
+The SoA refactor (``core.types.StreamState`` + the pooled backing in
+``core.jax_engine.BatchSimEngine``) exists so thousands of open-stream
+members ride a handful of flat numpy arrays instead of one Python object
+graph per workflow (per-wf dataclass + unscheduled ``set`` +
+pending-parent ``dict`` + per-wf ``RedistState`` mirrors).  This bench
+measures what that buys at stream scale:
+
+* **members-vs-wall curve** — the same member population run through
+  ``BatchSimEngine`` in both layouts at each point.  Per-member wall
+  *grows* with the point size (every member is an independent full
+  simulation and rendezvous rounds scale with the merged stream) — the
+  meaningful comparison is SoA vs object at the same point, and the
+  gap widens in SoA's favor at the ≥1k point;
+* **state-footprint block** — tracemalloc-traced peak at the largest
+  point in both layouts: the pooled arrays replace the object graph's
+  per-workflow sets/dicts (hundreds of bytes per task) with ~26 B/task
+  of flat arrays; the traced peak also carries layout-independent
+  simulation state (VM pools, events, results), so the ratio
+  understates the pure state-layout win;
+* **parity** — both layouts must produce bit-identical per-workflow
+  results at every point (the full matrix lives in
+  ``tests/test_dispatcher_matrix.py``);
+* a **peak-RSS block** + host metadata like ``bench_grid_wall``.
+
+``benchmarks.check_speedup --stream-floor`` gates the object/SoA traced
+peak ratio at the ≥1k point (recorded trajectory: 1.06x on the dev
+machine — deterministic allocations, so it travels across machines far
+better than walls), plus the parity flag and a loose wall-ratio guard
+(SoA walls track parity with ±10% noise; the guard only catches a
+catastrophic slowdown).
+"""
+from __future__ import annotations
+
+import resource
+import time
+import tracemalloc
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.jax_engine import BatchSimEngine, predistribute_workload
+from repro.core.scheduler import EBPSM
+from repro.core.types import PlatformConfig, clone_workload
+from repro.workflows.workload import WorkloadSpec, generate_workload
+
+from .bench_grid_wall import host_info
+
+# Members per point: the last point is the ≥1k-member regime the SoA
+# layer targets.  Every member is a small 3-workflow stream — distinct
+# workload draws cycled across members, cloned per member exactly like
+# the grid/online harnesses do.
+MEMBER_POINTS = (64, 256, 1024)
+WORKFLOWS_PER_MEMBER = 3
+N_PROTO_WORKLOADS = 8
+
+_LAST: Optional[Dict] = None
+
+
+def _protos(cfg: PlatformConfig):
+    out = []
+    for i in range(N_PROTO_WORKLOADS):
+        wl = generate_workload(cfg, WorkloadSpec(
+            n_workflows=WORKFLOWS_PER_MEMBER, arrival_rate_per_min=12.0,
+            seed=100 + i, sizes=("small",), budget_lo=0.5, budget_hi=1.0))
+        out.append(predistribute_workload(cfg, wl, EBPSM.budget_mode))
+    return out
+
+
+def _members(cfg: PlatformConfig, protos, n: int):
+    members, pre = [], []
+    for i in range(n):
+        proto, spares = protos[i % len(protos)]
+        members.append((EBPSM, clone_workload(proto), i))
+        pre.append(spares)
+    return members, pre
+
+
+def _run(cfg: PlatformConfig, protos, n: int, soa: bool,
+         traced: bool = False) -> Tuple[float, float, List]:
+    """One engine pass → (wall_s, traced_peak_bytes, result signature)."""
+    members, pre = _members(cfg, protos, n)
+    peak = 0.0
+    if traced:
+        tracemalloc.start()
+    t0 = time.perf_counter()
+    engine = BatchSimEngine(cfg, members, predistributed=pre, soa=soa)
+    results = engine.run()
+    wall = time.perf_counter() - t0
+    if traced:
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+    sig = [(w.wid, w.finish_ms, w.cost)
+           for res in results for w in res.workflows]
+    return wall, float(peak), sig
+
+
+def _measure(full: bool = False) -> Dict:
+    cfg = PlatformConfig()
+    protos = _protos(cfg)
+    points: List[Dict] = []
+    for n in MEMBER_POINTS:
+        wall_soa, _, sig_soa = _run(cfg, protos, n, soa=True)
+        wall_obj, _, sig_obj = _run(cfg, protos, n, soa=False)
+        points.append({
+            "members": n,
+            "workflows": n * WORKFLOWS_PER_MEMBER,
+            "wall_soa_s": wall_soa,
+            "wall_object_s": wall_obj,
+            "per_member_soa_ms": wall_soa / n * 1e3,
+            "per_member_object_ms": wall_obj / n * 1e3,
+            "parity_bit_exact": sig_soa == sig_obj,
+        })
+    n_max = MEMBER_POINTS[-1]
+    # Separate traced passes: tracemalloc slows execution severalfold,
+    # so the memory story and the wall story never share a run.
+    _, peak_soa, _ = _run(cfg, protos, n_max, soa=True, traced=True)
+    _, peak_obj, _ = _run(cfg, protos, n_max, soa=False, traced=True)
+    last = points[-1]
+    ru = resource.getrusage(resource.RUSAGE_SELF)
+    return {
+        "bench": "stream_scale",
+        "host": host_info(),
+        "members_points": list(MEMBER_POINTS),
+        "workflows_per_member": WORKFLOWS_PER_MEMBER,
+        "points": points,
+        "parity_bit_exact": all(p["parity_bit_exact"] for p in points),
+        "state_footprint": {
+            "members": n_max,
+            "traced_peak_soa_mb": peak_soa / 1e6,
+            "traced_peak_object_mb": peak_obj / 1e6,
+            "traced_peak_per_member_soa_kb": peak_soa / n_max / 1e3,
+            "traced_peak_per_member_object_kb": peak_obj / n_max / 1e3,
+            "object_over_soa_peak_ratio": (peak_obj / peak_soa
+                                           if peak_soa else 0.0),
+        },
+        "wall_object_over_soa_at_max": (
+            last["wall_object_s"] / last["wall_soa_s"]
+            if last["wall_soa_s"] else 0.0),
+        "peak_rss": {
+            # Linux ru_maxrss is KiB; process-wide high-water mark, so
+            # it includes every earlier point (recorded for provenance,
+            # not a per-layout comparison — that's the traced block).
+            "ru_maxrss_mb": ru.ru_maxrss / 1024.0,
+            "note": "process high-water mark across all points",
+        },
+    }
+
+
+def run(full: bool = False) -> List[Dict]:
+    global _LAST
+    _LAST = _measure(full)
+    rows = []
+    for p in _LAST["points"]:
+        rows.append({k: p[k] for k in
+                     ("members", "workflows", "wall_soa_s", "wall_object_s",
+                      "per_member_soa_ms", "per_member_object_ms",
+                      "parity_bit_exact")})
+    sf = _LAST["state_footprint"]
+    rows[-1]["soa_peak_mb"] = sf["traced_peak_soa_mb"]
+    rows[-1]["object_peak_mb"] = sf["traced_peak_object_mb"]
+    rows[-1]["mem_ratio"] = sf["object_over_soa_peak_ratio"]
+    return rows
+
+
+def artifact(rows: List[Dict]) -> Dict:
+    assert _LAST is not None, "run() must precede artifact()"
+    return _LAST

@@ -39,6 +39,16 @@ DEFAULT_GRID_FLOOR = 1.25
 # ratios of same-process walls, so they travel across machines far
 # better than absolute times.
 DEFAULT_REDIST_CEILING = 0.20
+DEFAULT_STREAM_PATH = "artifacts/bench/BENCH_stream_scale.json"
+# Object/SoA tracemalloc-peak ratio at the ≥1k-member point.  Tracks
+# 1.06 locally; traced peaks are deterministic allocation sums, so the
+# floor needs far less headroom than a wall-clock gate would.
+DEFAULT_STREAM_FLOOR = 1.03
+# SoA wall must stay within this factor of the object baseline's wall
+# at the ≥1k point.  Loose by design: the two walls track parity with
+# ±10% run-to-run noise even on an idle dev machine (0.89-1.07
+# observed), so this guard only catches a catastrophic slowdown.
+STREAM_WALL_GUARD = 0.75
 
 
 def _check_makespan(path: pathlib.Path, floor: float) -> None:
@@ -118,6 +128,41 @@ def _check_grid_wall(path: pathlib.Path, floor: float,
     _check_redistribution(art, redist_ceiling)
 
 
+def _check_stream_scale(path: pathlib.Path, floor: float,
+                        required: bool) -> None:
+    if not path.exists():
+        if required:
+            sys.exit(f"missing stream-scale artifact: {path}")
+        print(f"stream-scale artifact absent ({path}); gate skipped")
+        return
+    art = json.loads(path.read_text())
+    sf = art["state_footprint"]
+    ratio = float(sf["object_over_soa_peak_ratio"])
+    wall_ratio = float(art.get("wall_object_over_soa_at_max", 0.0))
+    print(
+        f"stream-scale [{sf['members']} members]: object/SoA traced-peak "
+        f"ratio {ratio:.4f} (floor {floor}); "
+        f"SoA {sf['traced_peak_soa_mb']:.1f} MB vs object "
+        f"{sf['traced_peak_object_mb']:.1f} MB; "
+        f"wall object/SoA {wall_ratio:.3f} (guard {STREAM_WALL_GUARD}); "
+        f"parity={art.get('parity_bit_exact')}"
+    )
+    if not art.get("parity_bit_exact"):
+        sys.exit("FAIL: SoA stream state lost bit-exact parity with the "
+                 "object layout")
+    if ratio < floor:
+        sys.exit(
+            f"FAIL: object/SoA peak-memory ratio {ratio:.4f} below floor "
+            f"{floor} — the SoA layout stopped paying for itself"
+        )
+    if wall_ratio < STREAM_WALL_GUARD:
+        sys.exit(
+            f"FAIL: SoA wall at the ≥1k-member point regressed beyond "
+            f"{1/STREAM_WALL_GUARD:.2f}x the object baseline "
+            f"(object/SoA {wall_ratio:.3f})"
+        )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", default=DEFAULT_PATH)
@@ -131,11 +176,25 @@ def main() -> None:
                     default=DEFAULT_REDIST_CEILING,
                     help="max Algorithm-3 redistribute share of wall on "
                          "the heavy calibration cell")
+    ap.add_argument("--stream-path", default=DEFAULT_STREAM_PATH)
+    ap.add_argument("--stream-floor", type=float, default=None,
+                    help="min object/SoA traced-peak ratio at the "
+                         "stream-scale bench's ≥1k-member point "
+                         f"(default {DEFAULT_STREAM_FLOOR} when the "
+                         "artifact is present); also checks SoA/object "
+                         "parity and the wall guard")
+    ap.add_argument("--require-stream", action="store_true",
+                    help="fail (rather than skip) when the stream-scale "
+                         "artifact is missing")
     args = ap.parse_args()
 
     _check_makespan(pathlib.Path(args.path), args.floor)
     _check_grid_wall(pathlib.Path(args.grid_path), args.grid_floor,
                      args.require_grid, args.redist_ceiling)
+    _check_stream_scale(pathlib.Path(args.stream_path),
+                        args.stream_floor if args.stream_floor is not None
+                        else DEFAULT_STREAM_FLOOR,
+                        args.require_stream or args.stream_floor is not None)
     print("benchmark gate OK")
 
 

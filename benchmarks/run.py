@@ -14,7 +14,7 @@ import traceback
 from . import (bench_container_delay, bench_cost_ratio,
                bench_cpu_degradation, bench_grid_wall, bench_makespan,
                bench_prov_delay, bench_roofline, bench_sched_throughput,
-               bench_waas_ml)
+               bench_stream_scale, bench_waas_ml)
 from .common import print_rows, write_json
 
 BENCHES = {
@@ -25,6 +25,8 @@ BENCHES = {
     "cost_ratio": (bench_cost_ratio, "Table3 violated cost/budget"),
     "sched_throughput": (bench_sched_throughput, "Alg2 kernel throughput"),
     "grid_wall": (bench_grid_wall, "paper-smoke grid end-to-end wall"),
+    "stream_scale": (bench_stream_scale,
+                     "SoA vs object state at open-stream member scale"),
     "waas_ml": (bench_waas_ml, "WaaS->ML bridge platform"),
     "roofline": (bench_roofline, "roofline from dry-run artifacts"),
 }

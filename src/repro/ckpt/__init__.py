@@ -1,1 +1,17 @@
-"""ckpt substrate."""
+"""ckpt substrate: atomic step-dir checkpoints for params pytrees and
+versioned simulation-stream snapshots (see ``checkpoint``)."""
+from .checkpoint import (STREAM_SCHEMA_VERSION, latest_step, prune, restore,
+                         restore_section, restore_stream, save,
+                         save_sections, save_stream)
+
+__all__ = [
+    "STREAM_SCHEMA_VERSION",
+    "latest_step",
+    "prune",
+    "restore",
+    "restore_section",
+    "restore_stream",
+    "save",
+    "save_sections",
+    "save_stream",
+]

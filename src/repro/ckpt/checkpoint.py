@@ -1,10 +1,22 @@
 """Sharded checkpointing with elastic restore.
 
-Layout: ``<dir>/step_<N>/`` holds one ``.npy`` per parameter leaf (flattened
+Layout: ``<dir>/step_<N>/`` holds one ``.npy`` per array leaf (flattened
 key path) plus ``manifest.json`` (tree structure, shapes, dtypes, step,
-mesh descriptor).  Writes are atomic (tmp dir + rename), restores can land
-on a *different* mesh: arrays are loaded on host and ``device_put`` against
+kind).  Writes are atomic (tmp dir + rename), restores can land on a
+*different* mesh: arrays are loaded on host and ``device_put`` against
 the new shardings — the elastic re-shard path node-failure recovery uses.
+
+Two checkpoint kinds share the scheme:
+
+* ``kind="params"`` — pytree sections (model params / optimizer state),
+  written by :func:`save_sections` (or the :func:`save` convenience
+  wrapper) and read back section-by-section with
+  :func:`restore_section` / :func:`restore`;
+* ``kind="stream"`` — a versioned simulation-stream snapshot
+  (``BatchSimEngine.snapshot()``: named numpy arrays + one opaque
+  residue blob), written by :func:`save_stream` and read back with
+  :func:`restore_stream`.  ``STREAM_SCHEMA_VERSION`` gates forward
+  compatibility: a restore refuses manifests newer than it understands.
 
 On a real multi-host pod each host would write only its owned shards
 (process-local slice of each NamedSharding); the manifest format already
@@ -16,12 +28,17 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+# Manifest schema version for ``kind="stream"`` checkpoints.  Bump when
+# the array block / residue contract changes; ``restore_stream`` refuses
+# manifests newer than this.
+STREAM_SCHEMA_VERSION = 1
 
 
 def _flatten(tree: PyTree) -> List[Tuple[str, Any]]:
@@ -34,16 +51,32 @@ def _flatten(tree: PyTree) -> List[Tuple[str, Any]]:
     return out
 
 
-def save(ckpt_dir: str, step: int, params: PyTree,
-         opt: Optional[PyTree] = None, extra: Optional[Dict] = None) -> str:
-    """Atomic checkpoint write; returns the final directory."""
+def _atomic_step_dir(ckpt_dir: str, step: int):
+    """(tmp, final) pair for an atomic ``step_<N>`` write: stage into
+    ``tmp``, then ``os.rename`` to ``final`` (same filesystem)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=ckpt_dir)
-    manifest: Dict[str, Any] = {"step": step, "params": {}, "opt": {},
+    return tmp, final
+
+
+def _commit(tmp: str, final: str) -> None:
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+
+def save_sections(ckpt_dir: str, step: int,
+                  sections: Mapping[str, Optional[PyTree]],
+                  extra: Optional[Dict] = None) -> str:
+    """Atomic pytree checkpoint: one named section per pytree (``None``
+    sections are skipped).  Returns the final directory."""
+    tmp, final = _atomic_step_dir(ckpt_dir, step)
+    manifest: Dict[str, Any] = {"step": step, "kind": "params",
                                 "extra": extra or {}}
     try:
-        for name, tree in (("params", params), ("opt", opt)):
+        for name, tree in sections.items():
+            manifest[name] = {}
             if tree is None:
                 continue
             for key, leaf in _flatten(tree):
@@ -54,13 +87,18 @@ def save(ckpt_dir: str, step: int, params: PyTree,
                                        "dtype": str(arr.dtype)}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        _commit(tmp, final)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
     return final
+
+
+def save(ckpt_dir: str, step: int, params: PyTree,
+         opt: Optional[PyTree] = None, extra: Optional[Dict] = None) -> str:
+    """Convenience wrapper: the classic params(+opt) checkpoint."""
+    return save_sections(ckpt_dir, step, {"params": params, "opt": opt},
+                         extra=extra)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -71,9 +109,9 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, step: Optional[int], template: PyTree,
-            shardings: Optional[PyTree] = None, section: str = "params"
-            ) -> Tuple[PyTree, int]:
+def restore_section(ckpt_dir: str, step: Optional[int], template: PyTree,
+                    shardings: Optional[PyTree] = None,
+                    section: str = "params") -> Tuple[PyTree, int]:
     """Restore ``section`` onto ``template``'s tree structure.
 
     ``shardings`` (optional pytree of NamedSharding, possibly for a mesh
@@ -93,11 +131,99 @@ def restore(ckpt_dir: str, step: Optional[int], template: PyTree,
     for i, (key, leaf) in enumerate(flat):
         meta = manifest[section][key]
         arr = np.load(os.path.join(d, meta["file"]))
+        want = tuple(np.shape(leaf))
+        if want != arr.shape:
+            raise ValueError(
+                f"checkpoint {section}/{key} has shape {arr.shape}, "
+                f"template expects {want} — a re-shard may change the "
+                "mesh, never the array shapes")
         if sh_flat is not None:
             arr = jax.device_put(arr, sh_flat[i][1])
         out.append(arr)
     _, treedef = jax.tree_util.tree_flatten(template)
     return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+# Back-compat alias (the pre-generalization public name).
+restore = restore_section
+
+
+# ---------------------------------------------------------------------------
+# Stream snapshots (kind="stream")
+# ---------------------------------------------------------------------------
+
+
+def save_stream(ckpt_dir: str, step: int, snap: Mapping[str, Any],
+                meta: Optional[Dict] = None) -> str:
+    """Atomic write of a simulation-stream snapshot.
+
+    ``snap`` is the ``{"arrays", "residue", "version", ...}`` dict the
+    engines produce (``SimState.snapshot`` / ``BatchSimEngine.snapshot``):
+    each named numpy array lands as its own ``.npy``; the opaque
+    ``residue`` bytes land as ``residue.pkl``; ``meta`` (scenario name,
+    partial rows, …) round-trips through the manifest as JSON.
+    """
+    tmp, final = _atomic_step_dir(ckpt_dir, step)
+    manifest: Dict[str, Any] = {
+        "step": step,
+        "kind": "stream",
+        "stream_version": int(snap.get("version", STREAM_SCHEMA_VERSION)),
+        "n_members": snap.get("n_members"),
+        "arrays": {},
+        "meta": meta or {},
+    }
+    try:
+        for name, arr in snap["arrays"].items():
+            arr = np.asarray(arr)
+            fn = "arr__" + name.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["arrays"][name] = {"file": fn,
+                                        "shape": list(arr.shape),
+                                        "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "residue.pkl"), "wb") as f:
+            f.write(snap["residue"])
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        _commit(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def restore_stream(ckpt_dir: str, step: Optional[int] = None
+                   ) -> Tuple[Dict[str, Any], int, Dict]:
+    """Load a stream snapshot → ``(snap, step, meta)``.
+
+    ``snap`` has the exact shape the engines' ``load_snapshot`` expects.
+    Refuses manifests written by a newer schema, and refuses
+    ``kind="params"`` directories loudly rather than mis-parsing them.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    kind = manifest.get("kind", "params")
+    if kind != "stream":
+        raise ValueError(f"{d} is a {kind!r} checkpoint, not a stream "
+                         "snapshot (use restore_section)")
+    version = int(manifest.get("stream_version", 1))
+    if version > STREAM_SCHEMA_VERSION:
+        raise ValueError(
+            f"stream snapshot schema v{version} is newer than supported "
+            f"v{STREAM_SCHEMA_VERSION} — upgrade before resuming")
+    arrays = {name: np.load(os.path.join(d, meta["file"]))
+              for name, meta in manifest["arrays"].items()}
+    with open(os.path.join(d, "residue.pkl"), "rb") as f:
+        residue = f.read()
+    snap: Dict[str, Any] = {"arrays": arrays, "residue": residue,
+                            "version": version}
+    if manifest.get("n_members") is not None:
+        snap["n_members"] = manifest["n_members"]
+    return snap, step, manifest.get("meta", {})
 
 
 def prune(ckpt_dir: str, keep: int = 3) -> None:

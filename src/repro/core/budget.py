@@ -42,7 +42,7 @@ A/B-gated rather than bit-parity-gated (see docs/PROFILING.md).
 from __future__ import annotations
 
 import os as _os
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -491,7 +491,14 @@ class RedistState:
                  "_want_sum", "_tcr")
 
     def __init__(self, cfg: PlatformConfig, wf: Workflow,
-                 unscheduled: Optional[Sequence[int]] = None):
+                 unscheduled: Optional[Sequence[int]] = None,
+                 backing: Optional[Tuple[np.ndarray, np.ndarray,
+                                         np.ndarray, np.ndarray]] = None):
+        """``backing``: optional ``(order, pos, mask, budget)`` array
+        segments — slices of a ``core.types.StreamState`` pool — to fill
+        and use in place of fresh per-workflow allocations.  Values and
+        semantics are identical either way (the arrays are just owned by
+        a shared backing instead of this object)."""
         ranks = wf.rank_cache
         if ranks is None:
             wf.rank_cache = ranks = [t.rank for t in wf.tasks]
@@ -499,19 +506,32 @@ class RedistState:
         # Ranks are a permutation (execution_order assigns positions), so
         # the stable argsort equals the scalar path's sorted(..., key=rank).
         order = np.argsort(np.asarray(ranks, np.int64), kind="stable")
-        self.order_all = order                     # S: tids, rank-ascending
-        pos = np.empty(n, np.int64)
+        if backing is None:
+            self.order_all = order                 # S: tids, rank-ascending
+            pos = np.empty(n, np.int64)
+        else:
+            out_order, pos, out_mask, out_budget = backing
+            out_order[:] = order
+            self.order_all = order = out_order
         pos[order] = np.arange(n, dtype=np.int64)
         self.pos_of = pos                          # tid -> position in S
-        if unscheduled is None:
-            self.mask = np.ones(n, bool)
+        if backing is None:
+            mask = np.ones(n, bool) if unscheduled is None \
+                else np.zeros(n, bool)
         else:
-            mask = np.zeros(n, bool)
+            mask = out_mask
+            mask[:] = unscheduled is None
+        if unscheduled is not None:
             pos_l = pos.tolist()
             for tid in unscheduled:
                 mask[pos_l[tid]] = True
-            self.mask = mask
-        self.budget_vec = np.array([t.budget for t in wf.tasks], np.float64)
+        self.mask = mask
+        if backing is None:
+            self.budget_vec = np.array([t.budget for t in wf.tasks],
+                                       np.float64)
+        else:
+            out_budget[:] = [t.budget for t in wf.tasks]
+            self.budget_vec = out_budget
         self._rows = None
         self._rows_list = None
         self._want = None

@@ -22,8 +22,9 @@ import dataclasses
 import heapq
 import math as _math
 import os as _os
+import pickle as _pickle
 import time as _time
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
@@ -35,6 +36,7 @@ from .types import (
     MS,
     PlatformConfig,
     SimResult,
+    StreamState,
     Task,
     Workflow,
     WorkflowResult,
@@ -63,6 +65,20 @@ def _profile_enabled() -> bool:
     return _os.environ.get("REPRO_PROFILE") == "1"
 
 
+def _object_state_forced() -> bool:
+    """``REPRO_OBJECT_STATE=1`` forces the legacy per-workflow object
+    state (`_WfState` dicts/sets) instead of the structure-of-arrays
+    ``StreamState`` default — the debugging/bisection escape hatch, the
+    state-layer analogue of ``REPRO_SCALAR_SELECT`` /
+    ``REPRO_SCALAR_REDIST``.  Read per ``SimState`` so tests can toggle
+    it without re-importing."""
+    return _os.environ.get("REPRO_OBJECT_STATE") == "1"
+
+# Version tag for SimState.snapshot() payloads (bumped on layout
+# changes; repro.ckpt.checkpoint.restore_stream refuses newer ones).
+STREAM_SNAPSHOT_VERSION = 1
+
+
 def new_profile() -> Dict[str, float]:
     """Fresh per-phase counter block (seconds + call counts)."""
     return {
@@ -80,6 +96,12 @@ def new_profile() -> Dict[str, float]:
 
 @dataclasses.dataclass(slots=True)
 class _WfState:
+    """Legacy per-workflow object state (``REPRO_OBJECT_STATE=1``).
+
+    Shares the accessor-method interface of :class:`_WfView` so every
+    ``SimState`` transition is state-layout-agnostic; the two layouts
+    are parity-gated in ``tests/test_dispatcher_matrix.py``."""
+
     wf: Workflow
     spare: float = 0.0
     cost: float = 0.0
@@ -94,6 +116,135 @@ class _WfState:
     # number of finish events it coalesces.
     pending_surplus: float = 0.0
     pending_events: int = 0
+
+    def begin_arrival(self) -> None:
+        wf = self.wf
+        self.remaining = wf.n_tasks
+        self.unscheduled = set(range(wf.n_tasks))
+        self.pending_parents = {t.tid: len(t.parents) for t in wf.tasks}
+
+    def unscheduled_seq(self) -> Sequence[int]:
+        """Unscheduled tids, any order (the scalar Algorithm-3 oracle
+        sorts by rank internally, so ordering is semantics-free)."""
+        return self.unscheduled
+
+    def discard_unscheduled(self, tid: int) -> None:
+        self.unscheduled.discard(tid)
+
+    def dec_pending(self, child: int) -> bool:
+        """Decrement the child's pending-parent count; True ⇒ released."""
+        v = self.pending_parents[child] - 1
+        self.pending_parents[child] = v
+        return v == 0
+
+    def make_redist(self, cfg: PlatformConfig) -> budget_mod.RedistState:
+        self.redist = budget_mod.RedistState(cfg, self.wf, self.unscheduled)
+        return self.redist
+
+
+class _WfView:
+    """Per-workflow accessor over the shared :class:`StreamState` arrays
+    (the default state layout).
+
+    Same interface as :class:`_WfState`; the scalar fields are numpy
+    array cells (``float()``/``int()`` narrowing on read keeps every
+    value a Python scalar, so downstream float algebra and JSON output
+    are bit-identical with the object path), and the unscheduled set /
+    pending-parent dict become segment slices of the pooled per-task
+    arrays.  ``redist`` wraps the StreamState Algorithm-3 pool segments
+    instead of allocating per-workflow mirrors."""
+
+    __slots__ = ("wf", "redist", "_ss", "_w", "_t0", "_n")
+
+    def __init__(self, wf: Workflow, ss: StreamState, wid: int, t0: int):
+        self.wf = wf
+        self.redist = None
+        self._ss = ss
+        self._w = wid
+        self._t0 = t0
+        self._n = wf.n_tasks
+
+    # -- per-workflow scalars ------------------------------------------------
+    @property
+    def spare(self) -> float:
+        return float(self._ss.spare[self._w])
+
+    @spare.setter
+    def spare(self, v: float) -> None:
+        self._ss.spare[self._w] = v
+
+    @property
+    def cost(self) -> float:
+        return float(self._ss.cost[self._w])
+
+    @cost.setter
+    def cost(self, v: float) -> None:
+        self._ss.cost[self._w] = v
+
+    @property
+    def remaining(self) -> int:
+        return int(self._ss.remaining[self._w])
+
+    @remaining.setter
+    def remaining(self, v: int) -> None:
+        self._ss.remaining[self._w] = v
+
+    @property
+    def finish_ms(self) -> int:
+        return int(self._ss.finish_ms[self._w])
+
+    @finish_ms.setter
+    def finish_ms(self, v: int) -> None:
+        self._ss.finish_ms[self._w] = v
+
+    @property
+    def pending_surplus(self) -> float:
+        return float(self._ss.pending_surplus[self._w])
+
+    @pending_surplus.setter
+    def pending_surplus(self, v: float) -> None:
+        self._ss.pending_surplus[self._w] = v
+
+    @property
+    def pending_events(self) -> int:
+        return int(self._ss.pending_events[self._w])
+
+    @pending_events.setter
+    def pending_events(self, v: int) -> None:
+        self._ss.pending_events[self._w] = v
+
+    # -- per-task segments ---------------------------------------------------
+    def begin_arrival(self) -> None:
+        ss, w, t0, n = self._ss, self._w, self._t0, self._n
+        ss.arrived[w] = True
+        ss.remaining[w] = n
+        ss.unscheduled[t0:t0 + n] = True
+        ss.pending_parents[t0:t0 + n] = \
+            [len(t.parents) for t in self.wf.tasks]
+
+    def unscheduled_seq(self) -> Sequence[int]:
+        t0 = self._t0
+        return np.flatnonzero(
+            self._ss.unscheduled[t0:t0 + self._n]).tolist()
+
+    def discard_unscheduled(self, tid: int) -> None:
+        self._ss.unscheduled[self._t0 + tid] = False
+
+    def dec_pending(self, child: int) -> bool:
+        pp = self._ss.pending_parents
+        i = self._t0 + child
+        v = pp[i] - 1
+        pp[i] = v
+        return v == 0
+
+    def make_redist(self, cfg: PlatformConfig) -> budget_mod.RedistState:
+        ss, t0 = self._ss, self._t0
+        seg = slice(t0, t0 + self._n)
+        self.redist = budget_mod.RedistState(
+            cfg, self.wf, self.unscheduled_seq(),
+            backing=(ss.redist_order[seg], ss.redist_pos[seg],
+                     ss.redist_mask[seg], ss.redist_budget[seg]))
+        return self.redist
 
 
 @dataclasses.dataclass(slots=True)
@@ -122,6 +273,8 @@ class SimState:
         trace: bool = False,
         predistributed: Optional[Dict[int, float]] = None,
         redistribute: str = "finish",
+        soa: Optional[bool] = None,
+        stream: Optional[StreamState] = None,
     ):
         """``predistributed``: wid → spare budget for workflows whose
         arrival-time budget distribution (Algorithm 1 / MSLBL) already ran
@@ -136,7 +289,17 @@ class SimState:
         pooled redistribution per workflow per scheduling cycle
         (``flush_redistributions``) — surplus flows coalesce, so results
         may differ in float; the A/B quality comparison lives in
-        ``benchmarks/bench_grid_wall.py``."""
+        ``benchmarks/bench_grid_wall.py``.
+
+        ``soa``: True/False/None — per-workflow mutable state layout.
+        None (default) resolves to the structure-of-arrays
+        ``StreamState`` unless ``REPRO_OBJECT_STATE=1`` forces the
+        legacy object layout; both are bit-exact (parity-gated in
+        ``tests/test_dispatcher_matrix.py``).
+
+        ``stream``: optional pre-allocated :class:`StreamState` (or a
+        :meth:`StreamState.view` segment of an engine-pooled backing)
+        sized for this simulation; implies ``soa``."""
         if redistribute not in ("finish", "round"):
             raise ValueError(f"redistribute={redistribute!r} "
                              "(expected 'finish' or 'round')")
@@ -151,7 +314,7 @@ class SimState:
         self._seq = 0
         self.now = 0
         self.n_events = 0
-        self.wf_state: Dict[int, _WfState] = {}
+        self.wf_state: Dict[int, Union[_WfState, "_WfView"]] = {}
         self.running: Dict[Tuple[int, int], _Running] = {}
         self.vm_bound: Dict[int, Tuple[int, int]] = {}  # vmid -> (wid, tid)
         self.trace_rows: List[tuple] = [] if trace else None
@@ -184,6 +347,15 @@ class SimState:
         for w in self.workflows:
             self._task_base[w.wid] = base
             base += w.n_tasks
+        # State layout: SoA StreamState (default) vs legacy objects.
+        self.soa = (not _object_state_forced()) if soa is None else bool(soa)
+        if stream is not None:
+            if not self.soa:
+                raise ValueError("stream= requires the SoA state layout")
+            self.stream: Optional[StreamState] = stream
+        else:
+            self.stream = (StreamState(len(self.workflows), total_tasks)
+                           if self.soa else None)
 
     # ---- event plumbing ----------------------------------------------------
     def _push(self, t_ms: int, kind: int, payload: tuple) -> None:
@@ -230,9 +402,11 @@ class SimState:
     # ---- handlers --------------------------------------------------------------
     def _handle_arrival(self, wid: int) -> None:
         wf = self.workflows[wid]
-        st = _WfState(wf=wf, remaining=wf.n_tasks)
-        st.unscheduled = set(range(wf.n_tasks))
-        st.pending_parents = {t.tid: len(t.parents) for t in wf.tasks}
+        if self.soa:
+            st = _WfView(wf, self.stream, wid, self._task_base[wid])
+        else:
+            st = _WfState(wf=wf)
+        st.begin_arrival()
         self.wf_state[wid] = st
         if self.predistributed is not None and wid in self.predistributed:
             st.spare = self.predistributed[wid]  # tasks already carry budgets
@@ -305,14 +479,14 @@ class SimState:
             if budget_mod._ARRAY_REDIST:
                 rd = st.redist
                 if rd is None:
-                    rd = st.redist = budget_mod.RedistState(
-                        self.cfg, wf, st.unscheduled)
+                    rd = st.make_redist(self.cfg)
                 st.spare = budget_mod.update_budget_fast(
                     self.cfg, wf, rd, tid, actual, st.spare
                 )
             else:
                 st.spare = budget_mod.update_budget(
-                    self.cfg, wf, tid, actual, st.spare, st.unscheduled
+                    self.cfg, wf, tid, actual, st.spare,
+                    st.unscheduled_seq()
                 )
             if prof is not None:
                 prof["redistribute_s"] += _time.perf_counter() - t0
@@ -320,8 +494,7 @@ class SimState:
                 prof["redistribute_events"] += 1
         # Release ready children.
         for c in task.children:
-            st.pending_parents[c] -= 1
-            if st.pending_parents[c] == 0:
+            if st.dec_pending(c):
                 heapq.heappush(self.queue, (self.now, wid, c))
 
     def _actual_cost_of(self, run: _Running) -> float:
@@ -372,21 +545,20 @@ class SimState:
             if st.pending_events:
                 self._flush_wf(st)
 
-    def _flush_wf(self, st: _WfState) -> None:
+    def _flush_wf(self, st: Union[_WfState, _WfView]) -> None:
         prof = self.profile
         t0 = _time.perf_counter() if prof is not None else 0.0
         if budget_mod._ARRAY_REDIST:
             rd = st.redist
             if rd is None:
-                rd = st.redist = budget_mod.RedistState(
-                    self.cfg, st.wf, st.unscheduled)
+                rd = st.make_redist(self.cfg)
             st.spare = budget_mod.update_budget_pooled(
                 self.cfg, st.wf, rd, st.pending_surplus, st.spare
             )
         else:
             st.spare = budget_mod.update_budget_pooled_scalar(
                 self.cfg, st.wf, st.pending_surplus, st.spare,
-                st.unscheduled
+                st.unscheduled_seq()
             )
         if prof is not None:
             prof["redistribute_s"] += _time.perf_counter() - t0
@@ -429,7 +601,7 @@ class SimState:
                 # Spare consumed by how much the estimate exceeds the base.
                 used = max(0.0, placement.est_cost - task.budget)
                 st.spare -= min(used, max(st.spare, 0.0))
-            st.unscheduled.discard(tid)
+            st.discard_unscheduled(tid)
             if st.redist is not None:
                 st.redist.mark_scheduled(tid)
             if placement.vm is not None:
@@ -492,7 +664,7 @@ class SimState:
                            inputs, task.budget, pool,
                            table=cost_tables.table_for(self.cfg, st.wf),
                            pool=self.pool)
-            st.unscheduled.discard(tid)
+            st.discard_unscheduled(tid)
             if st.redist is not None:
                 st.redist.mark_scheduled(tid)
             if p.vm is not None:
@@ -653,6 +825,141 @@ class SimState:
         )
 
 
+    # ---- checkpoint / resume ---------------------------------------------------
+    def snapshot(self) -> Dict[str, object]:
+        """Serializable snapshot: ``{"arrays", "residue", "version"}``.
+
+        ``arrays`` is the StreamState persisted block (gathered from the
+        object layout when ``soa=False`` — the interchange format is
+        layout-independent, so a snapshot written by either layout
+        restores into either) plus the per-task mutable ``Task`` fields
+        Algorithm 1/3 writes (budget/level/rank), in global-id order;
+        an ``order`` array preserves ``wf_state`` insertion order
+        (finalize and metric grouping iterate it).  ``residue`` is one
+        pickle of the heap-ordered event/queue lists, clocks, the VM
+        pool with in-flight pipelines (pickled together so VM object
+        identity between ``running`` and the pool survives), trace rows
+        and the resource-sharing counters.  Derived state — Algorithm-3
+        pools, cost tables, rank/input caches — is rebuilt lazily and
+        bit-identically after :meth:`load_snapshot`."""
+        n_wf = len(self.workflows)
+        total_tasks = sum(w.n_tasks for w in self.workflows)
+        if self.soa:
+            arrays = self.stream.snapshot_arrays()
+        else:
+            arrays = {name: np.zeros(n_wf if per_wf else total_tasks,
+                                     dtype=dt)
+                      for per_wf, fields in
+                      ((True, StreamState.WF_FIELDS),
+                       (False, StreamState.TASK_FIELDS))
+                      for name, dt in fields}
+            for wid, st in self.wf_state.items():
+                arrays["arrived"][wid] = True
+                for name in ("spare", "cost", "pending_surplus",
+                             "remaining", "finish_ms", "pending_events"):
+                    arrays[name][wid] = getattr(st, name)
+                t0 = self._task_base[wid]
+                pp = arrays["pending_parents"]
+                for tid, v in st.pending_parents.items():
+                    pp[t0 + tid] = v
+                un = arrays["unscheduled"]
+                for tid in st.unscheduled:
+                    un[t0 + tid] = True
+        arrays["order"] = np.fromiter(self.wf_state, np.int64,
+                                      count=len(self.wf_state))
+        arrays["task_budget"] = np.array(
+            [t.budget for w in self.workflows for t in w.tasks], np.float64)
+        arrays["task_level"] = np.array(
+            [t.level for w in self.workflows for t in w.tasks], np.int64)
+        arrays["task_rank"] = np.array(
+            [t.rank for w in self.workflows for t in w.tasks], np.int64)
+        residue = _pickle.dumps({
+            "events": self.events,
+            "queue": self.queue,
+            "seq": self._seq,
+            "now": self.now,
+            "n_events": self.n_events,
+            "pool": self.pool,
+            "running": self.running,
+            "vm_bound": self.vm_bound,
+            "trace_rows": self.trace_rows,
+            "data_mb_total": self.data_mb_total,
+            "data_mb_hit": self.data_mb_hit,
+            "container_warm": self.container_warm,
+            "container_init": self.container_init,
+            "container_cold": self.container_cold,
+            "profile": self.profile,
+        }, protocol=_pickle.HIGHEST_PROTOCOL)
+        return {"arrays": arrays, "residue": residue,
+                "version": STREAM_SNAPSHOT_VERSION}
+
+    def load_snapshot(self, snap: Dict[str, object]) -> None:
+        """Restore a :meth:`snapshot` into this freshly-constructed state
+        (same cfg/policy/workloads/seed/redistribute — the caller
+        rebuilds those deterministically; only mutable state loads)."""
+        if snap.get("version", 1) > STREAM_SNAPSHOT_VERSION:
+            raise ValueError(
+                f"snapshot version {snap.get('version')} is newer than "
+                f"supported {STREAM_SNAPSHOT_VERSION}")
+        arrays: Dict[str, np.ndarray] = snap["arrays"]
+        residue = _pickle.loads(snap["residue"])
+        # Mutable per-task fields written by Algorithm 1/3 / MSLBL.
+        tb = arrays["task_budget"].tolist()
+        tl = arrays["task_level"].tolist()
+        tr = arrays["task_rank"].tolist()
+        i = 0
+        for wf in self.workflows:
+            wf.rank_cache = None    # rebuilt from the restored ranks
+            for t in wf.tasks:
+                t.budget = tb[i]
+                t.level = tl[i]
+                t.rank = tr[i]
+                i += 1
+        # Per-workflow state, in the checkpointed insertion order.
+        order = arrays["order"].tolist()
+        self.wf_state = {}
+        if self.soa:
+            self.stream.load_arrays(arrays)
+            for wid in order:
+                self.wf_state[wid] = _WfView(
+                    self.workflows[wid], self.stream, wid,
+                    self._task_base[wid])
+        else:
+            for wid in order:
+                wf = self.workflows[wid]
+                t0 = self._task_base[wid]
+                n = wf.n_tasks
+                st = _WfState(wf=wf)
+                st.spare = float(arrays["spare"][wid])
+                st.cost = float(arrays["cost"][wid])
+                st.pending_surplus = float(arrays["pending_surplus"][wid])
+                st.remaining = int(arrays["remaining"][wid])
+                st.finish_ms = int(arrays["finish_ms"][wid])
+                st.pending_events = int(arrays["pending_events"][wid])
+                st.unscheduled = set(np.flatnonzero(
+                    arrays["unscheduled"][t0:t0 + n]).tolist())
+                st.pending_parents = dict(enumerate(
+                    arrays["pending_parents"][t0:t0 + n].tolist()))
+                self.wf_state[wid] = st
+        # Event plumbing + pool (one pickle: VM identity is preserved
+        # between running pipelines, vm_bound and the pool's own maps).
+        self.events = residue["events"]
+        self.queue = residue["queue"]
+        self._seq = residue["seq"]
+        self.now = residue["now"]
+        self.n_events = residue["n_events"]
+        self.pool = residue["pool"]
+        self.running = residue["running"]
+        self.vm_bound = residue["vm_bound"]
+        self.trace_rows = residue["trace_rows"]
+        self.data_mb_total = residue["data_mb_total"]
+        self.data_mb_hit = residue["data_mb_hit"]
+        self.container_warm = residue["container_warm"]
+        self.container_init = residue["container_init"]
+        self.container_cold = residue["container_cold"]
+        self.profile = residue["profile"]
+
+
 class SimEngine(SimState):
     """One policy × one workload → SimResult (sequential driver)."""
 
@@ -666,6 +973,7 @@ class SimEngine(SimState):
         batched: object = "auto",
         predistributed: Optional[Dict[int, float]] = None,
         redistribute: str = "finish",
+        soa: Optional[bool] = None,
     ):
         """``batched``: True / False / "auto" — use the JAX batched
         scheduling cycle (core.jax_cycles) when the queue×pool product is
@@ -673,7 +981,7 @@ class SimEngine(SimState):
         mid-cycle and stays sequential."""
         super().__init__(cfg, policy, workflows, seed=seed, trace=trace,
                          predistributed=predistributed,
-                         redistribute=redistribute)
+                         redistribute=redistribute, soa=soa)
         self.batched = batched
 
     # ---- main loop -----------------------------------------------------------

@@ -267,6 +267,28 @@ class _ThreadLocalBuffers(threading.local):
 
 _ROUND_BUFFERS = _ThreadLocalBuffers()
 
+# Mesh placement seam for the round buffers (stubbed: TPU tuning is a
+# later ROADMAP item).  ``parallel.sharding.round_buffer_placement`` is
+# imported lazily — sharding pulls in the model registry, which has no
+# business on the simulation hot path.
+_ROUND_BUFFER_MESH = None
+_ROUND_BUFFER_PLACEMENT = None
+
+
+def set_round_buffer_mesh(mesh) -> None:
+    """Install a device mesh for future round-buffer placement.  With
+    ``mesh=None`` (the default state) buffers stay host-staged numpy;
+    with a mesh, the replicated placement is computed and recorded but
+    — today — only consulted by tests: the actual device_put of the
+    ``[B, T, V]`` stacks is the deferred TPU-tuning work."""
+    global _ROUND_BUFFER_MESH, _ROUND_BUFFER_PLACEMENT
+    _ROUND_BUFFER_MESH = mesh
+    if mesh is None:
+        _ROUND_BUFFER_PLACEMENT = None
+        return
+    from ..parallel.sharding import round_buffer_placement
+    _ROUND_BUFFER_PLACEMENT = round_buffer_placement(mesh)
+
 
 class CycleRequest:
     """One simulation's auction state inside a (possibly multi-sim) cycle.

@@ -50,15 +50,20 @@ whole object graph.
 from __future__ import annotations
 
 import dataclasses
+import pickle as _pickle
 import time as _time
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
 
 from . import budget as budget_mod
-from .engine import SimState
+from .engine import STREAM_SNAPSHOT_VERSION, SimState, _object_state_forced
 from .jax_cycles import CycleRequest, multi_cycle
 from .mslbl import distribute_budget_mslbl
 from .scheduler import Policy
-from .types import PlatformConfig, SimResult, Workflow, clone_workload
+from .types import PlatformConfig, SimResult, StreamState, Workflow, \
+    clone_workload
 
 # One grid member: (policy, workflows, degradation seed).
 GridMember = Tuple[Policy, Sequence[Workflow], int]
@@ -82,6 +87,12 @@ AUCTION_MIN_PAIRS_ROUND = 1536
 _CyclePoint = Tuple[SimState, list]
 
 
+class StreamInterrupted(Exception):
+    """Raised by :meth:`BatchSimEngine.run` when the checkpoint hook asks
+    the stream to stop after a snapshot — the caller resumes later from
+    the written checkpoint (``repro.exp.run --resume``)."""
+
+
 class BatchSimEngine:
     """N independent simulations, rendezvous rounds, batched cycle scoring."""
 
@@ -94,6 +105,7 @@ class BatchSimEngine:
         batched: object = "auto",
         predistributed: Optional[Sequence[Optional[Dict[int, float]]]] = None,
         redistribute: str = "finish",
+        soa: Optional[bool] = None,
     ):
         """``batched``: False / True / "auto" / "member".
 
@@ -123,17 +135,42 @@ class BatchSimEngine:
         banks finish surpluses and redistributes once per workflow per
         scheduling cycle, so all finish events inside one rendezvous
         round coalesce into a single array call (shared ``SimState``
-        semantics: engine↔engine parity holds in both modes)."""
+        semantics: engine↔engine parity holds in both modes).
+
+        ``soa``: state layout (see ``SimState``).  In SoA mode (the
+        default) the engine allocates ONE pooled :class:`StreamState`
+        spanning every member and hands each ``SimState`` a zero-copy
+        :meth:`StreamState.view` segment — thousands of open-stream
+        members share a handful of flat numpy arrays instead of carrying
+        per-member object graphs, and driver-level aggregates
+        (:meth:`stream_stats`) reduce over the pooled arrays directly."""
         self.cfg = cfg
         self.use_pallas = use_pallas
         self.batched = batched
         self.redistribute = redistribute
         pre = predistributed or [None] * len(members)
+        soa_resolved = (not _object_state_forced()) if soa is None \
+            else bool(soa)
+        self.stream: Optional[StreamState] = None
+        views: List[Optional[StreamState]] = [None] * len(members)
+        if soa_resolved and members:
+            wf_counts = [len(wfs) for _, wfs, _ in members]
+            task_counts = [sum(w.n_tasks for w in wfs)
+                           for _, wfs, _ in members]
+            self.stream = StreamState(sum(wf_counts), sum(task_counts))
+            wf_lo = task_lo = 0
+            for i, (nw, nt) in enumerate(zip(wf_counts, task_counts)):
+                views[i] = self.stream.view(wf_lo, wf_lo + nw,
+                                            task_lo, task_lo + nt)
+                wf_lo += nw
+                task_lo += nt
         self.states = [
             SimState(cfg, policy, workflows, seed=seed, trace=trace,
-                     predistributed=p, redistribute=redistribute)
-            for (policy, workflows, seed), p in zip(members, pre)
+                     predistributed=p, redistribute=redistribute,
+                     soa=soa_resolved, stream=v)
+            for ((policy, workflows, seed), p, v) in zip(members, pre, views)
         ]
+        self._resumed = False
         self.rounds = 0
         self.batched_calls = 0
         self.batched_cycles = 0     # member-cycles scored by the kernel
@@ -175,12 +212,29 @@ class BatchSimEngine:
         ride = sum(pairs) >= AUCTION_MIN_PAIRS_ROUND
         return [ride and p > 0 for p in pairs]
 
-    def run(self) -> List[SimResult]:
+    def run(
+        self,
+        ckpt_hook: Optional[Callable[["BatchSimEngine"], bool]] = None,
+    ) -> List[SimResult]:
+        """``ckpt_hook``: called at the top of every rendezvous round —
+        the one point where every live member sits at a generator yield
+        with its pending cycle fully committed, so :meth:`snapshot` is
+        a consistent cut (fresh ``_member_steps`` generators over the
+        restored states resume bit-identically).  The hook owns the
+        save-rate decision; returning True stops the stream by raising
+        :class:`StreamInterrupted` (resume later via
+        :meth:`load_snapshot` + ``run()``)."""
         t0 = _time.time()
-        for st in self.states:
-            st.seed_arrivals()
+        if not self._resumed:
+            for st in self.states:
+                st.seed_arrivals()
         live = [self._member_steps(st) for st in self.states]
         while live:
+            if ckpt_hook is not None and ckpt_hook(self):
+                self.wall_s += _time.time() - t0
+                raise StreamInterrupted(
+                    f"stream stopped by checkpoint hook at round "
+                    f"{self.rounds}")
             self.rounds += 1
             points: List[_CyclePoint] = []
             parked: List[Iterator[_CyclePoint]] = []
@@ -219,11 +273,96 @@ class BatchSimEngine:
                     st.apply_cycle_placements(metas, placements, idle)
                     st.post_cycle()
             live = parked
-        self.wall_s = _time.time() - t0
+        # Accumulate (not assign): a resumed stream's wall includes the
+        # pre-interrupt segments restored by load_snapshot.
+        self.wall_s += _time.time() - t0
         # Per-member wall is the amortized share of the grid run (they sum
         # to the total); the whole-grid wall lives on the engine/BatchResult.
         share = self.wall_s / len(self.states) if self.states else 0.0
         return [st.finalize(wall_s=share) for st in self.states]
+
+    # ---- checkpoint / resume -------------------------------------------------
+    def snapshot(self) -> Dict[str, object]:
+        """One consistent cut of the whole stream: every member's
+        :meth:`SimState.snapshot` arrays keyed ``m<i>.<name>`` plus the
+        engine's dispatch counters, shaped for
+        ``repro.ckpt.checkpoint.save_stream``.  Only valid at a
+        rendezvous-round boundary (see :meth:`run`)."""
+        arrays: Dict[str, np.ndarray] = {}
+        residues: List[bytes] = []
+        for i, st in enumerate(self.states):
+            snap = st.snapshot()
+            for name, arr in snap["arrays"].items():
+                arrays[f"m{i:04d}.{name}"] = arr
+            residues.append(snap["residue"])
+        residue = _pickle.dumps({
+            "members": residues,
+            "counters": {
+                "rounds": self.rounds,
+                "batched_calls": self.batched_calls,
+                "batched_cycles": self.batched_cycles,
+                "serial_cycles": self.serial_cycles,
+                "round_pairs": self.round_pairs,
+                "batched_member_pairs": self.batched_member_pairs,
+                "wall_s": self.wall_s,
+            },
+        }, protocol=_pickle.HIGHEST_PROTOCOL)
+        return {"arrays": arrays, "residue": residue,
+                "version": STREAM_SNAPSHOT_VERSION,
+                "n_members": len(self.states)}
+
+    def load_snapshot(self, snap: Dict[str, object]) -> None:
+        """Restore a :meth:`snapshot` into this freshly-constructed
+        engine (same cfg/members/modes).  The next :meth:`run` skips
+        ``seed_arrivals`` and continues the stream bit-identically."""
+        if snap.get("n_members", len(self.states)) != len(self.states):
+            raise ValueError(
+                f"snapshot has {snap.get('n_members')} members, "
+                f"engine has {len(self.states)}")
+        residue = _pickle.loads(snap["residue"])
+        arrays: Dict[str, np.ndarray] = snap["arrays"]
+        version = snap.get("version", 1)
+        per_member: List[Dict[str, np.ndarray]] = \
+            [{} for _ in self.states]
+        for key, arr in arrays.items():
+            prefix, name = key.split(".", 1)
+            per_member[int(prefix[1:])][name] = arr
+        for st, member_arrays, member_residue in zip(
+                self.states, per_member, residue["members"]):
+            st.load_snapshot({"arrays": member_arrays,
+                              "residue": member_residue,
+                              "version": version})
+        c = residue["counters"]
+        self.rounds = c["rounds"]
+        self.batched_calls = c["batched_calls"]
+        self.batched_cycles = c["batched_cycles"]
+        self.serial_cycles = c["serial_cycles"]
+        self.round_pairs = list(c["round_pairs"])
+        self.batched_member_pairs = list(c["batched_member_pairs"])
+        self.wall_s = c["wall_s"]
+        self._resumed = True
+
+    def stream_stats(self) -> Dict[str, float]:
+        """Whole-stream aggregates reduced straight off the pooled
+        StreamState arrays (no per-member iteration); falls back to the
+        per-state objects under ``REPRO_OBJECT_STATE=1``."""
+        if self.stream is not None:
+            arrived = int(self.stream.arrived.sum())
+            open_wfs = int((self.stream.arrived
+                            & (self.stream.remaining > 0)).sum())
+            tasks_left = int(self.stream.remaining.sum())
+            spare = float(self.stream.spare.sum())
+        else:
+            arrived = open_wfs = tasks_left = 0
+            spare = 0.0
+            for st in self.states:
+                for wst in st.wf_state.values():
+                    arrived += 1
+                    open_wfs += wst.remaining > 0
+                    tasks_left += wst.remaining
+                    spare += wst.spare
+        return {"workflows_arrived": arrived, "workflows_open": open_wfs,
+                "tasks_remaining": tasks_left, "spare_budget": spare}
 
     def dispatch_stats(self) -> Dict[str, object]:
         """Aggregate-auction observability for benchmarks and reports."""
@@ -336,6 +475,7 @@ def simulate_batch(
     use_pallas: object = "auto",
     batched: object = "auto",
     redistribute: str = "finish",
+    soa: Optional[bool] = None,
 ) -> BatchResult:
     """Evaluate the full grid policies × workloads × seeds in one batched
     engine run.
@@ -367,7 +507,7 @@ def simulate_batch(
                 pre.append(spares)
     engine = BatchSimEngine(cfg, members, trace=trace, use_pallas=use_pallas,
                             batched=batched, predistributed=pre,
-                            redistribute=redistribute)
+                            redistribute=redistribute, soa=soa)
     results = engine.run()
     entries = [
         GridEntry(policy=name, workload=wi, seed=s, result=res)

@@ -227,6 +227,97 @@ def clone_workload(workflows: Sequence[Workflow]) -> List[Workflow]:
 
 
 # ---------------------------------------------------------------------------
+# Structure-of-arrays stream state
+# ---------------------------------------------------------------------------
+
+
+class StreamState:
+    """Structure-of-arrays owner of a simulation's per-workflow and
+    per-task mutable scalars.
+
+    The engines' hot bookkeeping — spare budget, accumulated cost,
+    unscheduled/remaining counts, finish clocks, round-mode surplus
+    banks, per-task pending-parent counters, the unscheduled mask, and
+    the Algorithm-3 ``RedistState`` pools (rank order, position index,
+    row mask, float64 budget mirror) — lives in flat numpy arrays
+    indexed by wid (per-workflow fields) or by task global id
+    (per-task fields), instead of one Python object graph per workflow.
+    ``core.engine`` reads and writes it through thin per-workflow
+    accessor views (``_WfView``) so the transition semantics stay
+    bit-exact with the legacy object path (``REPRO_OBJECT_STATE=1``).
+
+    Two properties make it the unit of scale-out and checkpointing:
+
+    * :meth:`view` returns a zero-copy segment (numpy slice views) —
+      ``core.jax_engine.BatchSimEngine`` allocates ONE pooled backing
+      for a whole grid and hands each member a view, so thousands of
+      open-stream members share a handful of allocations;
+    * :meth:`snapshot_arrays` / :meth:`load_arrays` give the persisted
+      array block ``repro.ckpt.checkpoint.save_stream`` writes.  The
+      Algorithm-3 pools are *derived* state (a pure function of task
+      ranks, budgets, and the unscheduled mask) and are deliberately
+      not persisted — restore rebuilds them lazily and bit-identically.
+    """
+
+    # (name, dtype): persisted per-workflow fields, indexed by wid.
+    WF_FIELDS: Tuple[Tuple[str, str], ...] = (
+        ("spare", "f8"), ("cost", "f8"), ("pending_surplus", "f8"),
+        ("remaining", "i8"), ("finish_ms", "i8"), ("pending_events", "i8"),
+        ("arrived", "?"),
+    )
+    # Persisted per-task fields, indexed by task global id.
+    TASK_FIELDS: Tuple[Tuple[str, str], ...] = (
+        ("pending_parents", "i8"), ("unscheduled", "?"),
+    )
+    # Derived Algorithm-3 pools (RedistState backing) — rebuilt, never
+    # persisted.  redist_mask is indexed by *position in rank order*
+    # within the workflow's segment, matching RedistState.mask.
+    POOL_FIELDS: Tuple[Tuple[str, str], ...] = (
+        ("redist_order", "i8"), ("redist_pos", "i8"),
+        ("redist_mask", "?"), ("redist_budget", "f8"),
+    )
+
+    __slots__ = tuple(n for n, _ in WF_FIELDS) \
+        + tuple(n for n, _ in TASK_FIELDS) \
+        + tuple(n for n, _ in POOL_FIELDS) \
+        + ("n_workflows", "n_tasks")
+
+    def __init__(self, n_workflows: int, n_tasks: int):
+        self.n_workflows = n_workflows
+        self.n_tasks = n_tasks
+        for name, dt in self.WF_FIELDS:
+            setattr(self, name, np.zeros(n_workflows, dtype=dt))
+        for name, dt in self.TASK_FIELDS + self.POOL_FIELDS:
+            setattr(self, name, np.zeros(n_tasks, dtype=dt))
+
+    def view(self, wf_lo: int, wf_hi: int,
+             task_lo: int, task_hi: int) -> "StreamState":
+        """Zero-copy segment view: writes through to this backing."""
+        v = object.__new__(StreamState)
+        v.n_workflows = wf_hi - wf_lo
+        v.n_tasks = task_hi - task_lo
+        for name, _ in self.WF_FIELDS:
+            setattr(v, name, getattr(self, name)[wf_lo:wf_hi])
+        for name, _ in self.TASK_FIELDS + self.POOL_FIELDS:
+            setattr(v, name, getattr(self, name)[task_lo:task_hi])
+        return v
+
+    def snapshot_arrays(self) -> Dict[str, np.ndarray]:
+        """Copies of the persisted fields (derived pools excluded)."""
+        return {name: getattr(self, name).copy()
+                for name, _ in self.WF_FIELDS + self.TASK_FIELDS}
+
+    def load_arrays(self, arrays: Dict[str, np.ndarray]) -> None:
+        """In-place restore of the persisted fields; the derived
+        Algorithm-3 pools are reset (rebuilt lazily on first use)."""
+        for name, _ in self.WF_FIELDS + self.TASK_FIELDS:
+            dst = getattr(self, name)
+            dst[:] = arrays[name]
+        for name, dt in self.POOL_FIELDS:
+            getattr(self, name)[:] = 0
+
+
+# ---------------------------------------------------------------------------
 # Results
 # ---------------------------------------------------------------------------
 

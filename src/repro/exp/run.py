@@ -36,7 +36,8 @@ import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..core.jax_engine import (BatchSimEngine, GridMember,
+from .. import ckpt
+from ..core.jax_engine import (BatchSimEngine, GridMember, StreamInterrupted,
                                predistribute_workload)
 from ..core.types import PlatformConfig, clone_workload
 from ..workflows.workload import cell_workload
@@ -258,6 +259,41 @@ def _artifact(scenario, rows: List[Dict], stats: Dict, wall_s: float,
     }
 
 
+class _StreamCkpt:
+    """``BatchSimEngine.run`` checkpoint hook: writes a
+    ``ckpt.save_stream`` snapshot every ``every_s`` of wall clock
+    (``every_s=0`` ⇒ every rendezvous round — the deterministic cadence
+    the CI resume smoke interrupts on), carrying the harness's
+    cross-seed progress (completed rows + dispatch stats) in the
+    manifest meta so a resumed run reassembles the identical artifact.
+    ``stop_after`` > 0 stops the stream after that many saves
+    (:class:`StreamInterrupted`) — a deterministic, in-band "kill"."""
+
+    def __init__(self, ckpt_dir: str, every_s: float, meta: Dict,
+                 stop_after: Optional[int] = None):
+        self.ckpt_dir = ckpt_dir
+        self.every_s = every_s
+        self.meta = meta
+        self.stop_after = stop_after
+        last = ckpt.latest_step(ckpt_dir)
+        # Continue numbering past earlier segments' steps: a resumed
+        # run must never rewrite a step the interrupt already wrote
+        # (latest_step would go stale mid-stream otherwise).
+        self.step = 0 if last is None else last + 1
+        self.saved = 0
+        self._last_t = time.monotonic()
+
+    def __call__(self, engine: BatchSimEngine) -> bool:
+        if time.monotonic() - self._last_t < self.every_s:
+            return False
+        ckpt.save_stream(self.ckpt_dir, self.step, engine.snapshot(),
+                         meta=self.meta)
+        self.step += 1
+        self.saved += 1
+        self._last_t = time.monotonic()
+        return self.stop_after is not None and self.saved >= self.stop_after
+
+
 def run_online(
     scenario: OnlineScenario,
     cfg: Optional[PlatformConfig] = None,
@@ -266,6 +302,10 @@ def run_online(
     use_pallas: object = "auto",
     batched: object = "auto",
     redistribute: str = "finish",
+    ckpt_dir: Optional[str] = None,
+    ckpt_every_s: Optional[float] = None,
+    resume: bool = False,
+    stop_after_ckpts: Optional[int] = None,
 ) -> Dict:
     """Stream an :class:`OnlineScenario`'s tenant mix through the batched
     engine, one merged multi-tenant stream per seed × every policy.
@@ -276,6 +316,13 @@ def run_online(
     and carry the per-tenant extensions (slowdown percentiles, per-QoS
     budget-met, fleet size, Jain fairness).  Returns the same artifact
     schema as :func:`run_grid`.
+
+    ``ckpt_dir`` + ``ckpt_every_s`` enable long-horizon checkpointing
+    (see :class:`_StreamCkpt`); ``resume=True`` restores the latest
+    snapshot in ``ckpt_dir`` — the stream continues bit-identically, so
+    the final artifact's rows and dispatch stats match an uninterrupted
+    run.  ``stop_after_ckpts`` raises :class:`StreamInterrupted` after
+    that many saves (deterministic interruption for tests/CI).
     """
     cfg = cfg or PlatformConfig()
     t0 = time.perf_counter()
@@ -284,7 +331,31 @@ def run_online(
     policies = [POLICY_BY_NAME[name] for name in scenario.policies]
     rows: List[Dict] = []
     stats_parts: List[Dict] = []
-    for seed in scenario.seeds:
+    resume_snap = None
+    start_seed_idx = 0
+    if resume:
+        if not ckpt_dir:
+            raise SystemExit("--resume requires --ckpt-dir")
+        resume_snap, step, meta = ckpt.restore_stream(ckpt_dir)
+        if meta.get("scenario") != scenario.name:
+            raise SystemExit(
+                f"checkpoint in {ckpt_dir} is for scenario "
+                f"{meta.get('scenario')!r}, not {scenario.name!r}")
+        if meta.get("redistribute") != redistribute:
+            raise SystemExit(
+                f"checkpoint was written with "
+                f"--redistribute {meta.get('redistribute')}, "
+                f"this run uses {redistribute}")
+        rows = list(meta.get("rows", []))
+        stats_parts = list(meta.get("stats", []))
+        start_seed_idx = int(meta.get("seed_index", 0))
+        if verbose:
+            print(f"  resuming {scenario.name} from step {step} "
+                  f"(seed index {start_seed_idx}, "
+                  f"{len(rows)} completed rows)")
+    for seed_idx, seed in enumerate(scenario.seeds):
+        if seed_idx < start_seed_idx:
+            continue  # fully covered by the restored rows
         tw = scenario.mix.build(cfg, seed)
         ideal = tw.ideal_ms(cfg)
         protos = {}
@@ -302,7 +373,20 @@ def run_online(
         engine = BatchSimEngine(cfg, members, trace=trace,
                                 predistributed=pre, use_pallas=use_pallas,
                                 batched=batched, redistribute=redistribute)
-        results = engine.run()
+        if resume_snap is not None:
+            engine.load_snapshot(resume_snap)
+            resume_snap = None
+        hook = None
+        if ckpt_dir and ckpt_every_s is not None:
+            hook = _StreamCkpt(ckpt_dir, ckpt_every_s, meta={
+                "scenario": scenario.name,
+                "redistribute": redistribute,
+                "seed": seed,
+                "seed_index": seed_idx,
+                "rows": rows,
+                "stats": stats_parts,
+            }, stop_after=stop_after_ckpts)
+        results = engine.run(ckpt_hook=hook)
         for name, res, st in zip(labels, results, engine.states):
             m = CellMetrics.from_result(
                 name, res, st.trace_rows, tenant_of=tw.tenant_of,
@@ -327,6 +411,7 @@ def run_online(
         redistribute=redistribute,
         scenario_kind="online",
         warmup_s=scenario.warmup_s,
+        p95_slowdown_ceiling=scenario.p95_slowdown_ceiling,
         tenants=[{
             "name": t.name,
             "qos": t.qos.name,
@@ -342,13 +427,21 @@ def run_online(
 
 
 def check_floors(art: Dict) -> List[str]:
-    """CI gate: EBPSM budget-met floor per cell + the headline makespan
-    win over MSLBL_MW (when both policies are in the grid)."""
+    """CI gate: EBPSM budget-met floor per cell, the p95-slowdown
+    ceiling (online scenarios that record one), and the headline
+    makespan win over MSLBL_MW (when both policies are in the grid)."""
     failures: List[str] = []
     floor = float(art.get("ebpsm_budget_met_floor", 0.0))
+    ceiling = float(art.get("p95_slowdown_ceiling", 0.0))
     for row in art["cells"]:
         if row["policy"] != "EBPSM":
             continue
+        if ceiling > 0 and row.get("p95_slowdown", 0.0) > ceiling + 1e-9:
+            failures.append(
+                f"EBPSM p95 slowdown {row['p95_slowdown']:.2f} > ceiling "
+                f"{ceiling:.2f} in cell app={row['app']} "
+                f"rate={row['rate_wf_per_min']} seed={row['seed']}"
+            )
         if row.get("n_workflows", 1) == 0:
             # A cell whose workflows were all warm-up-excluded would pass
             # the floor vacuously (budget_met defaults to 1.0) — fail
@@ -451,6 +544,22 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--check-floors", action="store_true",
                     help="exit non-zero on budget-met floor / makespan-win "
                          "regressions")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="stream-checkpoint directory (online grids only): "
+                         "with --ckpt-every-s, snapshots land here; with "
+                         "--resume, the latest snapshot restores from here")
+    ap.add_argument("--ckpt-every-s", type=float, default=None,
+                    help="seconds of wall clock between stream snapshots "
+                         "(0 = every rendezvous round — deterministic, "
+                         "what the CI resume smoke uses)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the online stream from the latest "
+                         "checkpoint in --ckpt-dir (bit-identical "
+                         "continuation)")
+    ap.add_argument("--stop-after-ckpts", type=int, default=None,
+                    help="interrupt the stream after N checkpoint saves "
+                         "(exit code 3) — deterministic interruption for "
+                         "the CI resume smoke")
     args = ap.parse_args(argv)
 
     scenario = get_scenario(args.grid)
@@ -464,9 +573,21 @@ def main(argv: Optional[List[str]] = None) -> None:
               f"{len(scenario.policies)} policies, "
               f"{scenario.n_workflows} workflows/stream, "
               f"warm-up {scenario.warmup_s:.0f}s)")
-        art = run_online(scenario, verbose=True,
-                         redistribute=args.redistribute)
+        try:
+            art = run_online(scenario, verbose=True,
+                             redistribute=args.redistribute,
+                             ckpt_dir=args.ckpt_dir,
+                             ckpt_every_s=args.ckpt_every_s,
+                             resume=args.resume,
+                             stop_after_ckpts=args.stop_after_ckpts)
+        except StreamInterrupted as e:
+            print(f"interrupted: {e} — resume with --resume "
+                  f"--ckpt-dir {args.ckpt_dir}")
+            raise SystemExit(3)
     else:
+        if args.ckpt_dir or args.resume:
+            raise SystemExit("--ckpt-dir/--resume are online-grid flags "
+                             f"({scenario.name} is a closed grid)")
         print(f"grid {scenario.name}: {scenario.n_cells} cells "
               f"({scenario.n_workload_cells} workloads x "
               f"{len(scenario.policies)} policies)"

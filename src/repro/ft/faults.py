@@ -21,7 +21,7 @@ from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
-from ..ckpt import checkpoint as ckpt
+from .. import ckpt
 
 
 @dataclasses.dataclass
@@ -65,7 +65,8 @@ class FaultyTrainer:
                 history["step"].append(step)
                 step += 1
                 if step % self.plan.ckpt_every == 0:
-                    ckpt.save(self.ckpt_dir, step, params, opt)
+                    ckpt.save_sections(self.ckpt_dir, step,
+                                       {"params": params, "opt": opt})
                     ckpt.prune(self.ckpt_dir, self.plan.keep)
             except StepFailure:
                 self.restarts += 1
@@ -73,9 +74,9 @@ class FaultyTrainer:
                 if last is None:     # no checkpoint yet → restart from init
                     step = start_step
                     continue
-                params, _ = ckpt.restore(self.ckpt_dir, last, params,
-                                         shardings, "params")
-                opt, _ = ckpt.restore(self.ckpt_dir, last, opt,
-                                      None, "opt")
+                params, _ = ckpt.restore_section(self.ckpt_dir, last, params,
+                                                 shardings, "params")
+                opt, _ = ckpt.restore_section(self.ckpt_dir, last, opt,
+                                              None, "opt")
                 step = last
         return params, opt, history

@@ -89,3 +89,20 @@ def state_shardings(model: Model, mesh: Mesh, shape_name: str,
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+def round_buffer_placement(mesh: Optional[Mesh] = None):
+    """Mesh placement for the batched-round ``[B, T, V]`` pair buffers
+    (``core.jax_cycles._RoundBuffers``).
+
+    Stubbed seam: today the round buffers are host numpy staged per
+    call, so the only meaningful placement is fully replicated — member
+    rows are independent, and splitting B across a mesh axis is the TPU
+    tuning item the ROADMAP defers.  ``core.jax_cycles`` consumes this
+    lazily via ``set_round_buffer_mesh`` so this module's model imports
+    stay off the simulation hot path.  Returns ``None`` (host staging)
+    when no mesh is given.
+    """
+    if mesh is None:
+        return None
+    return replicated(mesh)

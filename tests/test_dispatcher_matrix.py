@@ -281,3 +281,42 @@ def test_round_buffers_lru_cap():
     rb.get(4, 16, 32)                  # 2048 elems: evicts the LRU bucket
     assert (4, 16, 32) in rb.buckets
     assert (4, 16, 16) not in rb.buckets
+
+
+# ---------------------------------------------------------------------------
+# State layout: SoA StreamState vs legacy per-workflow objects
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batched", [False, "auto"],
+                         ids=["serial", "aggregate-auto"])
+def test_state_layout_parity(batched, monkeypatch):
+    """SoA BatchSimEngine grids are bit-exact with *object-layout*
+    SimEngine references (and the cross pairing), on both dispatcher
+    paths — the state layout must be invisible to semantics."""
+    if batched == "auto":
+        monkeypatch.setattr(je, "AUCTION_MIN_PAIRS_ROUND", 16)
+    members = _mixed_members(random.Random(4321))
+    eng = BatchSimEngine(CFG, [(p, wl, s) for p, wl, s, *_ in members],
+                         batched=batched, soa=True)
+    results = eng.run()
+    assert eng.stream is not None, "soa=True must allocate the pool"
+    members2 = _mixed_members(random.Random(4321))
+    for (pol, wl, seed, *_), res in zip(members2, results):
+        ref = SimEngine(CFG, pol, wl, seed=seed, soa=False).run()
+        assert_same(ref, res,
+                    f"{pol.name} seed={seed} batched={batched} soa-vs-obj")
+
+
+def test_object_state_escape_hatch(monkeypatch):
+    """REPRO_OBJECT_STATE=1 forces the legacy object layout on both
+    engines without touching call sites — and stays bit-exact with the
+    SoA default."""
+    wl = workload(11, n=5)
+    soa = BatchSimEngine(CFG, [(EBPSM, wl, 0)], soa=True)
+    assert soa.stream is not None
+    res_soa = soa.run()[0]
+    monkeypatch.setenv("REPRO_OBJECT_STATE", "1")
+    obj = BatchSimEngine(CFG, [(EBPSM, workload(11, n=5), 0)])
+    assert obj.stream is None, "hatch must suppress the pooled arrays"
+    assert_same(res_soa, obj.run()[0], "REPRO_OBJECT_STATE hatch")

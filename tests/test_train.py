@@ -126,6 +126,40 @@ def test_elastic_restore_different_sharding(tmp_path):
     assert max(jax.tree.leaves(err)) == 0.0
 
 
+def test_faulty_trainer_elastic_reshard(tmp_path):
+    """Restart path restores onto a *different* mesh's shardings — the
+    elastic re-shard route FaultyTrainer.run takes after a failure."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m = tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(m))
+    mesh = make_host_mesh(model=1)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+    plan = FaultPlan(fail_prob=0.35, seed=7, ckpt_every=2, keep=3)
+    tr = FaultyTrainer(str(tmp_path), plan)
+    params, opt, hist = tr.run(params=params, opt=opt, n_steps=10,
+                               step_fn=step,
+                               batch_fn=lambda s: tiny_batch(m.cfg, 0),
+                               shardings=sh)
+    assert tr.restarts > 0, "fault injection never fired — raise fail_prob"
+    assert int(opt["step"]) >= 10
+    # Restored-then-trained params landed on the target mesh's sharding.
+    leaf = jax.tree.leaves(params)[0]
+    assert leaf.sharding.is_equivalent_to(NamedSharding(mesh, P()),
+                                          ndim=leaf.ndim)
+
+
+def test_restore_section_rejects_shape_mismatch(tmp_path):
+    """A template whose leaf shapes disagree with the checkpoint must
+    fail loudly — elastic restore re-shards meshes, never array shapes."""
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    ckpt.save(str(tmp_path), 1, params)
+    bad = {"w": jnp.ones((8, 4)), "b": jnp.zeros((4,))}
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore_section(str(tmp_path), 1, bad, None, "params")
+
+
 def test_data_pipeline_deterministic_and_shardable():
     dc = DataConfig(seed=3, seq_len=64, global_batch=8)
     a = batch_at(dc, 5)
