@@ -109,13 +109,13 @@ def _best_wall(fn, repeats: int = REPEATS) -> float:
 
 def _redist_run(n: int, array: bool,
                 mode: str = "finish") -> Tuple[Dict, Tuple]:
-    """One EBPSM run of the calibration cell with REPRO_PROFILE on.
+    """One EBPSM run of the calibration cell with profiling on.
 
     Returns the profile-derived numbers and a per-workflow result
     signature ``(wid, finish_ms, cost)`` for bit-exact comparisons.
+    Profiling opts in via the per-engine ``profile=True`` kwarg — no
+    ``os.environ`` mutation, so concurrent runs stay unaffected.
     """
-    had = os.environ.get("REPRO_PROFILE")
-    os.environ["REPRO_PROFILE"] = "1"
     was_array = _budget._ARRAY_REDIST
     _budget._ARRAY_REDIST = array
     try:
@@ -127,7 +127,8 @@ def _redist_run(n: int, array: bool,
         pol = POLICY_BY_NAME["EBPSM"]
         proto, spares = predistribute_workload(cfg, wl, pol.budget_mode)
         engine = BatchSimEngine(cfg, [(pol, clone_workload(proto), 0)],
-                                predistributed=[spares], redistribute=mode)
+                                predistributed=[spares], redistribute=mode,
+                                profile=True)
         res = engine.run()[0]
         prof = engine.dispatch_stats()["profile"]
         wfs = sorted(res.workflows, key=lambda w: w.wid)
@@ -150,10 +151,6 @@ def _redist_run(n: int, array: bool,
         return out, sig
     finally:
         _budget._ARRAY_REDIST = was_array
-        if had is None:
-            os.environ.pop("REPRO_PROFILE", None)
-        else:
-            os.environ["REPRO_PROFILE"] = had
 
 
 def _measure_redistribution() -> Dict:

@@ -42,6 +42,9 @@ from .types import (
     WorkflowResult,
     degradation_tables,
 )
+from ..obs import events as obs_events
+from ..obs import timeseries as obs_ts
+from ..obs.events import EventLog
 from ..sim.cloud import VM, VM_IDLE, VM_PROVISIONING, DataKey, VMPool
 
 ARRIVAL, FINISH, VM_READY, REAP = 0, 1, 2, 3
@@ -91,7 +94,38 @@ def new_profile() -> Dict[str, float]:
         "redistribute_events": 0.0,   # task finishes feeding them (≥ above
         #                               in round mode: events coalesce)
         "selects": 0.0,
+        "pipelines": 0.0,             # _start_pipeline timer pairs
     }
+
+
+# Calibrated-once cost of one perf_counter bracket (two calls), the unit
+# the self-measured profile_overhead_s is denominated in.
+_PAIR_COST_S: Optional[float] = None
+
+
+def _perf_pair_cost_s() -> float:
+    global _PAIR_COST_S
+    if _PAIR_COST_S is None:
+        n = 10000
+        t0 = _time.perf_counter()
+        for _ in range(n):
+            _time.perf_counter()
+            _time.perf_counter()
+        _PAIR_COST_S = (_time.perf_counter() - t0) / n
+    return _PAIR_COST_S
+
+
+def profile_overhead_s(prof: Dict[str, float]) -> float:
+    """Self-measured cost of the profiling counters themselves: every
+    instrumented phase wraps its body in one ``perf_counter`` bracket,
+    so the overhead is (brackets taken) × (calibrated bracket cost).
+    Surfaced as ``dispatch_stats()["profile"]["profile_overhead_s"]`` so
+    consumers can judge whether the counters perturb what they time."""
+    pairs = (prof.get("distributions", 0.0)
+             + prof.get("redistributions", 0.0)
+             + prof.get("selects", 0.0)
+             + prof.get("pipelines", 0.0))
+    return pairs * _perf_pair_cost_s()
 
 
 @dataclasses.dataclass(slots=True)
@@ -275,6 +309,8 @@ class SimState:
         redistribute: str = "finish",
         soa: Optional[bool] = None,
         stream: Optional[StreamState] = None,
+        profile: Optional[bool] = None,
+        events: Union[None, bool, EventLog] = None,
     ):
         """``predistributed``: wid → spare budget for workflows whose
         arrival-time budget distribution (Algorithm 1 / MSLBL) already ran
@@ -299,7 +335,19 @@ class SimState:
 
         ``stream``: optional pre-allocated :class:`StreamState` (or a
         :meth:`StreamState.view` segment of an engine-pooled backing)
-        sized for this simulation; implies ``soa``."""
+        sized for this simulation; implies ``soa``.
+
+        ``profile``: True/False/None — per-phase wall-clock counters.
+        None (default) defers to ``REPRO_PROFILE=1``; the kwarg lets
+        tests and benchmarks toggle per engine without mutating
+        ``os.environ``.
+
+        ``events``: None/bool/:class:`~repro.obs.events.EventLog` —
+        structured event tracing (repro.obs).  None defers to
+        ``REPRO_TRACE=1``; True allocates a fresh log; a log instance
+        is used as-is.  Off ⇒ ``self.elog is None`` and every emission
+        site is a single attribute-load + None check (same zero-cost
+        discipline as ``profile``)."""
         if redistribute not in ("finish", "round"):
             raise ValueError(f"redistribute={redistribute!r} "
                              "(expected 'finish' or 'round')")
@@ -330,7 +378,12 @@ class SimState:
         # of a run the Algorithm 1/3 budget algebra, selection, and the
         # pipeline math each cost — see BatchSimEngine.dispatch_stats().
         self.profile: Optional[Dict[str, float]] = (
-            new_profile() if _profile_enabled() else None)
+            new_profile()
+            if (profile if profile is not None else _profile_enabled())
+            else None)
+        # Structured event log (repro.obs) — None unless opted in; every
+        # emission below is guarded by one `is not None` test.
+        self.elog: Optional[EventLog] = obs_events.resolve_events(events)
         total_tasks = sum(w.n_tasks for w in self.workflows)
         # Global per-task degradation tables, indexed by task global id.
         # Kept as plain-float lists: the pipeline math runs per dispatch
@@ -408,22 +461,34 @@ class SimState:
             st = _WfState(wf=wf)
         st.begin_arrival()
         self.wf_state[wid] = st
+        ev = self.elog
+        if ev is not None:
+            ev.append(obs_events.WF_ARRIVE, self.now, wid, wf.n_tasks,
+                      x=wf.budget)
         if self.predistributed is not None and wid in self.predistributed:
             st.spare = self.predistributed[wid]  # tasks already carry budgets
+            dist_mode = 2
         elif self.policy.budget_mode == "mslbl":
             t0 = _time.perf_counter() if self.profile is not None else 0.0
             distribute_budget_mslbl(self.cfg, wf, wf.budget)
             if self.profile is not None:
                 self.profile["distribute_s"] += _time.perf_counter() - t0
                 self.profile["distributions"] += 1
+            dist_mode = 1
         else:
             t0 = _time.perf_counter() if self.profile is not None else 0.0
             st.spare = budget_mod.distribute_budget(self.cfg, wf, wf.budget)
             if self.profile is not None:
                 self.profile["distribute_s"] += _time.perf_counter() - t0
                 self.profile["distributions"] += 1
+            dist_mode = 0
+        if ev is not None:
+            ev.append(obs_events.BUDGET_DISTRIBUTE, self.now, wid,
+                      dist_mode, x=st.spare)
         for tid in wf.entry_tasks():
             heapq.heappush(self.queue, (self.now, wid, tid))
+            if ev is not None:
+                ev.append(obs_events.TASK_READY, self.now, wid, tid)
 
     def _inputs_of(self, wf: Workflow, task: Task) -> List[Tuple[DataKey, float]]:
         # Static per task (DAG and sizes are immutable once built) and
@@ -460,8 +525,16 @@ class SimState:
         st.cost += actual
         st.remaining -= 1
         st.finish_ms = max(st.finish_ms, self.now)
+        ev = self.elog
+        if ev is not None:
+            ev.append(obs_events.TASK_FINISH, self.now, wid, tid, vm.vmid,
+                      x=actual)
+            ev.append(obs_events.VM_IDLE, self.now, vm.vmid)
         if self.policy.budget_mode == "mslbl":
             st.spare += task.budget - actual
+            if ev is not None:
+                ev.append(obs_events.BUDGET_SPARE, self.now, wid, tid,
+                          x=task.budget - actual, y=st.spare)
         elif self.redistribute == "round":
             # Round-batched Algorithm 3: bank the surplus; the pooled
             # redistribution runs once per workflow per scheduling cycle
@@ -470,6 +543,9 @@ class SimState:
             st.pending_events += 1
             if self.profile is not None:
                 self.profile["redistribute_events"] += 1
+            if ev is not None:
+                ev.append(obs_events.BUDGET_SPARE, self.now, wid, tid,
+                          x=task.budget - actual, y=st.pending_surplus)
         else:
             # Algorithm 3: one redistribution per task finish.  The array
             # path (core.budget.RedistState) is bit-exact with the scalar
@@ -492,10 +568,18 @@ class SimState:
                 prof["redistribute_s"] += _time.perf_counter() - t0
                 prof["redistributions"] += 1
                 prof["redistribute_events"] += 1
+            if ev is not None:
+                ev.append(obs_events.BUDGET_REDISTRIBUTE, self.now, wid,
+                          tid, 1, x=task.budget - actual, y=st.spare)
+        if ev is not None and st.remaining == 0:
+            ev.append(obs_events.WF_DONE, self.now, wid, x=st.cost,
+                      y=wf.budget)
         # Release ready children.
         for c in task.children:
             if st.dec_pending(c):
                 heapq.heappush(self.queue, (self.now, wid, c))
+                if ev is not None:
+                    ev.append(obs_events.TASK_READY, self.now, wid, c)
 
     def _actual_cost_of(self, run: _Running) -> float:
         return run.actual_cost  # computed at dispatch time
@@ -503,12 +587,17 @@ class SimState:
     def _handle_vm_ready(self, vmid: int) -> None:
         vm = self.pool.vms[vmid]
         if vm.status == VM_PROVISIONING:
+            ev = self.elog
+            if ev is not None:
+                ev.append(obs_events.VM_READY, self.now, vmid)
             bound = self.vm_bound.get(vmid)
             if bound is not None:
                 self.pool.mark_busy(vm)
                 self._start_pipeline(*bound, vm, triggered_provision=True)
             else:
                 self.pool.mark_idle(vm, self.now)
+                if ev is not None:
+                    ev.append(obs_events.VM_IDLE, self.now, vmid)
                 self._arm_reap(vm)
 
     def _arm_reap(self, vm: VM) -> None:
@@ -527,10 +616,15 @@ class SimState:
         vm = self.pool.vms[vmid]
         if vm.status == VM_IDLE and vm.idle_epoch == idle_epoch:
             self.pool.terminate(vm, self.now)
+            if self.elog is not None:
+                self.elog.append(obs_events.VM_REAP, self.now, vmid)
 
     def reap_now(self) -> None:
+        ev = self.elog
         for vm in self.pool.idle_vms():
             self.pool.terminate(vm, self.now)
+            if ev is not None:
+                ev.append(obs_events.VM_REAP, self.now, vm.vmid)
 
     # ---- round-batched Algorithm 3 (redistribute="round") --------------------
     def flush_redistributions(self) -> None:
@@ -563,6 +657,10 @@ class SimState:
         if prof is not None:
             prof["redistribute_s"] += _time.perf_counter() - t0
             prof["redistributions"] += 1
+        if self.elog is not None:
+            self.elog.append(obs_events.BUDGET_REDISTRIBUTE, self.now,
+                             st.wf.wid, -1, st.pending_events,
+                             x=st.pending_surplus, y=st.spare)
         st.pending_surplus = 0.0
         st.pending_events = 0
 
@@ -597,13 +695,22 @@ class SimState:
             if self.profile is not None:
                 self.profile["select_s"] += _time.perf_counter() - t0
                 self.profile["selects"] += 1
+            ev = self.elog
             if self.policy.budget_mode == "mslbl":
                 # Spare consumed by how much the estimate exceeds the base.
                 used = max(0.0, placement.est_cost - task.budget)
-                st.spare -= min(used, max(st.spare, 0.0))
+                spend = min(used, max(st.spare, 0.0))
+                st.spare -= spend
+                if ev is not None and spend > 0.0:
+                    ev.append(obs_events.BUDGET_SPARE, self.now, wid, tid,
+                              x=-spend, y=st.spare)
             st.discard_unscheduled(tid)
             if st.redist is not None:
                 st.redist.mark_scheduled(tid)
+            if ev is not None:
+                ev.append(obs_events.TASK_PLACE, self.now, wid, tid,
+                          placement.vm.vmid if placement.vm else -1,
+                          placement.tier, x=placement.est_cost)
             if placement.vm is not None:
                 vm = placement.vm
                 self.pool.mark_busy(vm)
@@ -615,6 +722,9 @@ class SimState:
                 vm = self.pool.provision(placement.new_vmt_idx, self.now, tag)
                 self.vm_bound[vm.vmid] = (wid, tid)
                 self._push(vm.ready_ms, VM_READY, (vm.vmid,))
+                if ev is not None:
+                    ev.append(obs_events.VM_PROVISION, self.now, vm.vmid,
+                              vm.vmt_idx)
             if self.trace_rows is not None:
                 self.trace_rows.append(
                     (self.now, wid, tid, placement.tier, placement.est_cost,
@@ -667,6 +777,10 @@ class SimState:
             st.discard_unscheduled(tid)
             if st.redist is not None:
                 st.redist.mark_scheduled(tid)
+            ev = self.elog
+            if ev is not None:
+                ev.append(obs_events.TASK_PLACE, self.now, wid, tid,
+                          p.vm.vmid if p.vm else -1, p.tier, x=p.est_cost)
             if p.vm is not None:
                 vm = p.vm
                 self.pool.mark_busy(vm)
@@ -678,6 +792,9 @@ class SimState:
                 vm = self.pool.provision(p.new_vmt_idx, self.now, tag)
                 self.vm_bound[vm.vmid] = (wid, tid)
                 self._push(vm.ready_ms, VM_READY, (vm.vmid,))
+                if ev is not None:
+                    ev.append(obs_events.VM_PROVISION, self.now, vm.vmid,
+                              vm.vmt_idx)
             if self.trace_rows is not None:
                 self.trace_rows.append((self.now, wid, tid, p.tier,
                                         p.est_cost,
@@ -696,13 +813,17 @@ class SimState:
         # Classify warmth from the VM's pre-activation state (the ground
         # truth), not from the returned delay — degenerate configs can make
         # the init and full-provision delays coincide.
+        warmth = obs_events.WARMTH_NONE
         if self.policy.use_containers:
             if vm.active_container == wf.app:
                 self.container_warm += 1
+                warmth = obs_events.WARMTH_WARM
             elif wf.app in vm.image_cache:
                 self.container_init += 1
+                warmth = obs_events.WARMTH_INIT
             else:
                 self.container_cold += 1
+                warmth = obs_events.WARMTH_COLD
         c_ms = self.pool.activate_container(vm, wf.app, self.policy.use_containers)
         # 2. input staging: only cache-missing bytes travel.  One pass
         # computes the missing volume and collects the keys to cache
@@ -758,33 +879,31 @@ class SimState:
         run = _Running(wid, tid, vm, triggered_provision, actual_cost)
         self.running[(wid, tid)] = run
         self._push(finish, FINISH, (wid, tid))
+        ev = self.elog
+        if ev is not None:
+            ev.append(obs_events.VM_BUSY, self.now, vm.vmid)
+            if warmth > obs_events.WARMTH_WARM:
+                # Activation that cost time (image init or full download).
+                ev.append(obs_events.VM_CONTAINER, self.now, vm.vmid,
+                          warmth)
+            ev.append(obs_events.TASK_START, self.now, wid, tid, vm.vmid,
+                      warmth, x=missing, y=total_mb)
         if self.profile is not None:
             self.profile["pipeline_s"] += _time.perf_counter() - tp0
+            self.profile["pipelines"] += 1
 
     # ---- results ---------------------------------------------------------------
     def _fleet_stats(self) -> Tuple[int, float]:
         """(peak concurrent VMs, time-weighted mean fleet size) from the
-        pool's lease intervals — every VM is terminated by finalize, so
-        both endpoints are defined."""
-        deltas: List[Tuple[int, int]] = []
-        horizon = 0
-        for vm in self.pool.vms:
-            end = vm.terminated_ms if vm.terminated_ms >= 0 else self.now
-            deltas.append((vm.lease_start_ms, 1))
-            deltas.append((end, -1))
-            horizon = max(horizon, end)
-        if not deltas or horizon <= 0:
-            return 0, 0.0
-        deltas.sort()
-        peak = cur = 0
-        area = 0.0   # VM-ms integral
-        prev = 0
-        for t, d in deltas:
-            area += cur * (t - prev)
-            prev = t
-            cur += d
-            peak = max(peak, cur)
-        return peak, area / horizon
+        pool's lease intervals, via the shared ``obs.timeseries``
+        reconstruction — the same path the event-derived fleet series
+        uses, so traces and end-of-run aggregates cannot disagree.
+        Every VM is terminated by finalize, so both endpoints are
+        defined."""
+        return obs_ts.peak_and_mean(
+            (vm.lease_start_ms for vm in self.pool.vms),
+            (vm.terminated_ms if vm.terminated_ms >= 0 else self.now
+             for vm in self.pool.vms))
 
     def finalize(self, wall_s: float = 0.0) -> SimResult:
         if self.redistribute == "round":
@@ -794,6 +913,14 @@ class SimState:
             for st in self.wf_state.values():
                 if st.pending_events:
                     self._flush_wf(st)
+        if self.elog is not None:
+            # Close the remaining leases in the event stream before the
+            # pool stamps their termination — the event-derived fleet
+            # series ends exactly where the lease intervals do.
+            for vm in self.pool.vms:
+                if vm.terminated_ms < 0:
+                    self.elog.append(obs_events.VM_REAP, self.now,
+                                     vm.vmid, 1)
         self.pool.finalize(self.now)
         peak_vms, mean_fleet = self._fleet_stats()
         results = [
@@ -889,6 +1016,7 @@ class SimState:
             "container_init": self.container_init,
             "container_cold": self.container_cold,
             "profile": self.profile,
+            "elog": self.elog,
         }, protocol=_pickle.HIGHEST_PROTOCOL)
         return {"arrays": arrays, "residue": residue,
                 "version": STREAM_SNAPSHOT_VERSION}
@@ -958,6 +1086,10 @@ class SimState:
         self.container_init = residue["container_init"]
         self.container_cold = residue["container_cold"]
         self.profile = residue["profile"]
+        # Snapshots from before the obs subsystem lack the key; a log
+        # restored from the cut replaces whatever the constructor made,
+        # so resumed traces are byte-identical with uninterrupted runs.
+        self.elog = residue.get("elog")
 
 
 class SimEngine(SimState):
@@ -974,14 +1106,21 @@ class SimEngine(SimState):
         predistributed: Optional[Dict[int, float]] = None,
         redistribute: str = "finish",
         soa: Optional[bool] = None,
+        profile: Optional[bool] = None,
+        events: Union[None, bool, EventLog] = None,
     ):
         """``batched``: True / False / "auto" — use the JAX batched
         scheduling cycle (core.jax_cycles) when the queue×pool product is
         large.  EBPSM-family policies only; MSLBL mutates spare budget
-        mid-cycle and stays sequential."""
+        mid-cycle and stays sequential.
+
+        ``profile`` / ``events``: per-engine toggles for the phase
+        counters and the structured event log (None defers to
+        ``REPRO_PROFILE`` / ``REPRO_TRACE``; see :class:`SimState`)."""
         super().__init__(cfg, policy, workflows, seed=seed, trace=trace,
                          predistributed=predistributed,
-                         redistribute=redistribute, soa=soa)
+                         redistribute=redistribute, soa=soa,
+                         profile=profile, events=events)
         self.batched = batched
 
     # ---- main loop -----------------------------------------------------------

@@ -58,8 +58,11 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
 import numpy as np
 
 from . import budget as budget_mod
-from .engine import STREAM_SNAPSHOT_VERSION, SimState, _object_state_forced
+from .engine import (STREAM_SNAPSHOT_VERSION, SimState,
+                     _object_state_forced, profile_overhead_s)
 from .jax_cycles import CycleRequest, multi_cycle
+from ..obs import events as obs_events
+from ..obs.events import EventLog
 from .mslbl import distribute_budget_mslbl
 from .scheduler import Policy
 from .types import PlatformConfig, SimResult, StreamState, Workflow, \
@@ -106,6 +109,8 @@ class BatchSimEngine:
         predistributed: Optional[Sequence[Optional[Dict[int, float]]]] = None,
         redistribute: str = "finish",
         soa: Optional[bool] = None,
+        profile: Optional[bool] = None,
+        events: Optional[bool] = None,
     ):
         """``batched``: False / True / "auto" / "member".
 
@@ -143,7 +148,15 @@ class BatchSimEngine:
         :meth:`StreamState.view` segment — thousands of open-stream
         members share a handful of flat numpy arrays instead of carrying
         per-member object graphs, and driver-level aggregates
-        (:meth:`stream_stats`) reduce over the pooled arrays directly."""
+        (:meth:`stream_stats`) reduce over the pooled arrays directly.
+
+        ``profile`` / ``events``: per-engine toggles (None defers to
+        ``REPRO_PROFILE`` / ``REPRO_TRACE``).  With events on, every
+        member ``SimState`` gets its own log (exported per cell by
+        ``repro.exp.run --trace-dir``) and the driver keeps a separate
+        :class:`EventLog` of grid-level events — rendezvous rounds and
+        batched auction calls, timestamped by round index (driver events
+        span members, so no single simulated clock applies)."""
         self.cfg = cfg
         self.use_pallas = use_pallas
         self.batched = batched
@@ -164,10 +177,14 @@ class BatchSimEngine:
                                             task_lo, task_lo + nt)
                 wf_lo += nw
                 task_lo += nt
+        ev_enabled = (obs_events._trace_enabled() if events is None
+                      else bool(events))
+        self.elog: Optional[EventLog] = EventLog() if ev_enabled else None
         self.states = [
             SimState(cfg, policy, workflows, seed=seed, trace=trace,
                      predistributed=p, redistribute=redistribute,
-                     soa=soa_resolved, stream=v)
+                     soa=soa_resolved, stream=v, profile=profile,
+                     events=ev_enabled)
             for ((policy, workflows, seed), p, v) in zip(members, pre, views)
         ]
         self._resumed = False
@@ -249,12 +266,14 @@ class BatchSimEngine:
             owners: List[Tuple[SimState, list, list]] = []
             requests: List[CycleRequest] = []
             pairs = [len(st.queue) * len(idle) for st, idle in points]
+            ride_pairs = 0
             for (st, idle), p, ride in zip(points, pairs,
                                            self._round_rides_kernel(points,
                                                                     pairs)):
                 if ride:
                     self.batched_cycles += 1
                     self.batched_member_pairs.append(p)
+                    ride_pairs += p
                     tasks, metas, tables = st.drain_queue_for_cycle()
                     owners.append((st, metas, idle))
                     requests.append(CycleRequest(
@@ -264,8 +283,16 @@ class BatchSimEngine:
                     self.serial_cycles += 1
                     st.sequential_cycle(idle)
                     st.post_cycle()
+            if self.elog is not None:
+                self.elog.append(obs_events.GRID_ROUND, self.rounds,
+                                 self.rounds, len(points), len(requests),
+                                 sum(pairs))
             if requests:
                 self.batched_calls += 1
+                if self.elog is not None:
+                    self.elog.append(obs_events.GRID_AUCTION, self.rounds,
+                                     self.rounds, len(requests),
+                                     d=ride_pairs)
                 all_placements = multi_cycle(self.cfg, requests,
                                              use_pallas=self.use_pallas)
                 for (st, metas, idle), placements in zip(owners,
@@ -305,6 +332,7 @@ class BatchSimEngine:
                 "round_pairs": self.round_pairs,
                 "batched_member_pairs": self.batched_member_pairs,
                 "wall_s": self.wall_s,
+                "elog": self.elog,
             },
         }, protocol=_pickle.HIGHEST_PROTOCOL)
         return {"arrays": arrays, "residue": residue,
@@ -340,6 +368,7 @@ class BatchSimEngine:
         self.round_pairs = list(c["round_pairs"])
         self.batched_member_pairs = list(c["batched_member_pairs"])
         self.wall_s = c["wall_s"]
+        self.elog = c.get("elog")
         self._resumed = True
 
     def stream_stats(self) -> Dict[str, float]:
@@ -383,6 +412,11 @@ class BatchSimEngine:
             "min_member_pairs_batched": min(self.batched_member_pairs,
                                             default=0),
         }
+        # Structured-event counts (repro.obs): member logs + the driver
+        # log, summed per kind; {"enabled": False, ...} when tracing is
+        # off so consumers can key on the block unconditionally.
+        out["events"] = obs_events.events_block(
+            [st.elog for st in self.states] + [self.elog])
         # REPRO_PROFILE=1 per-phase counters, summed across members.  The
         # headline derived number is the Algorithm-3 redistribution share
         # of the grid wall — the quantity behind the ROADMAP's "~45% of a
@@ -397,6 +431,10 @@ class BatchSimEngine:
             agg["engine_wall_s"] = self.wall_s
             agg["redistribute_share_of_wall"] = (
                 agg["redistribute_s"] / self.wall_s if self.wall_s else 0.0)
+            # Self-measured cost of the counters themselves (bracket
+            # count × calibrated perf_counter-pair cost) — merge-safe
+            # (sums across engines like the other absolute seconds).
+            agg["profile_overhead_s"] = profile_overhead_s(agg)
             out["profile"] = agg
         return out
 
@@ -476,6 +514,8 @@ def simulate_batch(
     batched: object = "auto",
     redistribute: str = "finish",
     soa: Optional[bool] = None,
+    profile: Optional[bool] = None,
+    events: Optional[bool] = None,
 ) -> BatchResult:
     """Evaluate the full grid policies × workloads × seeds in one batched
     engine run.
@@ -507,7 +547,8 @@ def simulate_batch(
                 pre.append(spares)
     engine = BatchSimEngine(cfg, members, trace=trace, use_pallas=use_pallas,
                             batched=batched, predistributed=pre,
-                            redistribute=redistribute, soa=soa)
+                            redistribute=redistribute, soa=soa,
+                            profile=profile, events=events)
     results = engine.run()
     entries = [
         GridEntry(policy=name, workload=wi, seed=s, result=res)

@@ -40,6 +40,7 @@ from .. import ckpt
 from ..core.jax_engine import (BatchSimEngine, GridMember, StreamInterrupted,
                                predistribute_workload)
 from ..core.types import PlatformConfig, clone_workload
+from ..obs import export as obs_export
 from ..workflows.workload import cell_workload
 from .metrics import CellMetrics, aggregate_by_policy
 from .scenarios import (POLICY_BY_NAME, OnlineScenario, Scenario,
@@ -93,6 +94,22 @@ def _merge_stats(parts: List[Dict]) -> Dict:
         if "profile" in s:
             profiles.append(s["profile"])
     out["min_member_pairs_batched"] = min(mins) if mins else 0
+    # Structured-event counts (repro.obs): totals and per-kind counts sum
+    # across engines exactly like the phase counters, so a --workers run
+    # merges to the same block as a serial run of the same chunking
+    # (asserted in tests/test_exp.py::test_run_grid_workers_matches_serial).
+    ev_parts = [s["events"] for s in parts if "events" in s]
+    if ev_parts:
+        by_kind: Dict[str, int] = {}
+        for e in ev_parts:
+            for k, n in e["by_kind"].items():
+                by_kind[k] = by_kind.get(k, 0) + n
+        out["events"] = {
+            "enabled": any(e["enabled"] for e in ev_parts),
+            "total": sum(e["total"] for e in ev_parts),
+            "by_kind": dict(sorted(by_kind.items())),
+            "dropped": sum(e["dropped"] for e in ev_parts),
+        }
     if parts:
         # Uniform across parts — every engine in a run shares the mode.
         out["redistribute_mode"] = parts[0].get("redistribute_mode",
@@ -109,6 +126,15 @@ def _merge_stats(parts: List[Dict]) -> Dict:
     return out
 
 
+def _cell_label(scenario_name: str, cell: WorkloadCell,
+                policy: str) -> str:
+    """Deterministic filesystem-safe trace filename stem for one
+    (cell, policy)."""
+    blo, bhi = cell.budget_interval
+    return (f"{scenario_name}__{cell.app}_r{cell.rate:g}"
+            f"_b{blo:g}-{bhi:g}_s{cell.seed}__{policy}")
+
+
 def _grid_batch(
     scenario: Scenario,
     cfg: PlatformConfig,
@@ -117,13 +143,17 @@ def _grid_batch(
     use_pallas: object,
     batched: object,
     redistribute: str = "finish",
+    events: bool = False,
+    trace_dir: Optional[str] = None,
 ) -> Tuple[List[Dict], Dict]:
     """Simulate one batch of workload cells × all scenario policies.
 
     Self-contained and picklable-argument-only: this is both the serial
     loop body and the unit of work a ``--workers`` process executes
     (cells are regenerated in-worker from their deterministic seeds —
-    nothing heavy crosses the process boundary).
+    nothing heavy crosses the process boundary).  ``trace_dir`` implies
+    ``events`` and writes one Perfetto trace + JSONL dump per
+    (cell, policy) — workers write their own cells' files directly.
     """
     policies = [POLICY_BY_NAME[name] for name in scenario.policies]
     members: List[GridMember] = []
@@ -144,10 +174,16 @@ def _grid_batch(
             pre.append(spares)
     engine = BatchSimEngine(cfg, members, trace=trace, predistributed=pre,
                             use_pallas=use_pallas, batched=batched,
-                            redistribute=redistribute)
+                            redistribute=redistribute,
+                            events=bool(events or trace_dir))
     results = engine.run()
     rows: List[Dict] = []
+    vm_type_names = [t.name for t in cfg.vm_types]
     for (cell, pol_name), res, st in zip(labels, results, engine.states):
+        if trace_dir and st.elog is not None:
+            obs_export.write_cell_trace(
+                trace_dir, _cell_label(scenario.name, cell, pol_name),
+                st.elog, vm_type_names=vm_type_names)
         m = CellMetrics.from_result(pol_name, res, st.trace_rows)
         rows.append({
             "app": cell.app,
@@ -171,6 +207,8 @@ def run_grid(
     batched: object = "auto",
     redistribute: str = "finish",
     executor=None,
+    events: bool = False,
+    trace_dir: Optional[str] = None,
 ) -> Dict:
     """Run the whole grid; returns the artifact payload.
 
@@ -179,6 +217,11 @@ def run_grid(
     parent).  ``executor`` lets callers reuse a warm pool across runs
     (the grid-wall benchmark does); it must come from
     ``grid_executor(workers)``.
+
+    ``events`` enables structured-event collection (the artifact's
+    ``dispatch.events`` block); ``trace_dir`` additionally writes one
+    Perfetto trace + JSONL event dump per (cell, policy) — see
+    ``repro.obs`` and docs/PROFILING.md.
     """
     cfg = cfg or PlatformConfig()
     wcells = list(scenario.workload_cells())
@@ -198,7 +241,8 @@ def run_grid(
         ex = executor or grid_executor(workers)
         try:
             futs = [ex.submit(_grid_batch, scenario, cfg, b, trace,
-                              use_pallas, batched, redistribute)
+                              use_pallas, batched, redistribute,
+                              events, trace_dir)
                     for b in batches]
             for i, f in enumerate(futs):
                 parts.append(f.result())
@@ -212,7 +256,8 @@ def run_grid(
     else:
         for batch in batches:
             parts.append(_grid_batch(scenario, cfg, batch, trace,
-                                     use_pallas, batched, redistribute))
+                                     use_pallas, batched, redistribute,
+                                     events, trace_dir))
             if verbose:
                 done = sum(len(p[0]) for p in parts)
                 print(f"  {done}/{scenario.n_cells} cells "
@@ -306,6 +351,8 @@ def run_online(
     ckpt_every_s: Optional[float] = None,
     resume: bool = False,
     stop_after_ckpts: Optional[int] = None,
+    events: bool = False,
+    trace_dir: Optional[str] = None,
 ) -> Dict:
     """Stream an :class:`OnlineScenario`'s tenant mix through the batched
     engine, one merged multi-tenant stream per seed × every policy.
@@ -323,6 +370,12 @@ def run_online(
     the final artifact's rows and dispatch stats match an uninterrupted
     run.  ``stop_after_ckpts`` raises :class:`StreamInterrupted` after
     that many saves (deterministic interruption for tests/CI).
+
+    ``events`` enables structured-event collection; ``trace_dir``
+    additionally writes one Perfetto trace + JSONL dump per
+    (seed, policy), with task slices categorized by tenant and QoS.
+    Event logs ride the stream snapshots, so a resumed run's traces are
+    byte-identical with an uninterrupted one (tests/test_obs.py).
     """
     cfg = cfg or PlatformConfig()
     t0 = time.perf_counter()
@@ -372,7 +425,8 @@ def run_online(
             pre.append(spares)
         engine = BatchSimEngine(cfg, members, trace=trace,
                                 predistributed=pre, use_pallas=use_pallas,
-                                batched=batched, redistribute=redistribute)
+                                batched=batched, redistribute=redistribute,
+                                events=bool(events or trace_dir))
         if resume_snap is not None:
             engine.load_snapshot(resume_snap)
             resume_snap = None
@@ -388,6 +442,12 @@ def run_online(
             }, stop_after=stop_after_ckpts)
         results = engine.run(ckpt_hook=hook)
         for name, res, st in zip(labels, results, engine.states):
+            if trace_dir and st.elog is not None:
+                obs_export.write_cell_trace(
+                    trace_dir, f"{scenario.name}__seed{seed}__{name}",
+                    st.elog,
+                    vm_type_names=[t.name for t in cfg.vm_types],
+                    tenant_of=tw.tenant_of, qos_of=tw.qos_of)
             m = CellMetrics.from_result(
                 name, res, st.trace_rows, tenant_of=tw.tenant_of,
                 qos_of=tw.qos_of, ideal_ms=ideal, warmup_ms=warmup_ms)
@@ -560,6 +620,15 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="interrupt the stream after N checkpoint saves "
                          "(exit code 3) — deterministic interruption for "
                          "the CI resume smoke")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write one Perfetto/Chrome-trace JSON + JSONL "
+                         "event dump per (cell, policy) into this "
+                         "directory (implies event collection; load in "
+                         "ui.perfetto.dev — see docs/PROFILING.md)")
+    ap.add_argument("--trace-events", action="store_true",
+                    help="collect structured events without writing trace "
+                         "files (the artifact's dispatch.events block; "
+                         "REPRO_TRACE=1 is the env equivalent)")
     args = ap.parse_args(argv)
 
     scenario = get_scenario(args.grid)
@@ -579,7 +648,9 @@ def main(argv: Optional[List[str]] = None) -> None:
                              ckpt_dir=args.ckpt_dir,
                              ckpt_every_s=args.ckpt_every_s,
                              resume=args.resume,
-                             stop_after_ckpts=args.stop_after_ckpts)
+                             stop_after_ckpts=args.stop_after_ckpts,
+                             events=args.trace_events,
+                             trace_dir=args.trace_dir)
         except StreamInterrupted as e:
             print(f"interrupted: {e} — resume with --resume "
                   f"--ckpt-dir {args.ckpt_dir}")
@@ -594,7 +665,13 @@ def main(argv: Optional[List[str]] = None) -> None:
               + (f", {args.workers} workers" if args.workers > 1 else ""))
         art = run_grid(scenario, cells_per_batch=args.cells_per_batch,
                        verbose=True, workers=args.workers,
-                       redistribute=args.redistribute)
+                       redistribute=args.redistribute,
+                       events=args.trace_events, trace_dir=args.trace_dir)
+    if args.trace_dir:
+        n_traces = len([f for f in os.listdir(args.trace_dir)
+                        if f.endswith(".trace.json")])
+        print(f"traces:   {args.trace_dir} ({n_traces} Perfetto traces; "
+              f"validate with tools/check_trace.py)")
 
     os.makedirs(args.out, exist_ok=True)
     jpath = os.path.join(args.out, ARTIFACT_NAME)

@@ -1,0 +1,26 @@
+"""repro.obs — structured simulation tracing and time-series metrics.
+
+Three layers, all pure over the event log:
+
+* :mod:`repro.obs.events` — the typed, numpy-columned event bus the
+  engines emit into (off by default; ``REPRO_TRACE=1`` or ``events=``
+  opts in);
+* :mod:`repro.obs.timeseries` — sampled-over-simulated-time series
+  (fleet, utilization, queue depth, cost vs budget, slowdown) and the
+  shared lease-interval ``peak_and_mean`` reconstruction;
+* :mod:`repro.obs.export` — deterministic Chrome-trace/Perfetto JSON
+  and versioned JSONL dumps (``repro.exp.run --trace-dir``).
+
+Schema documentation: docs/PROFILING.md § Event schema.
+"""
+from .events import (EVENT_SCHEMA_VERSION, EventLog, events_block,
+                     resolve_events)
+from .export import chrome_trace, events_jsonl, write_cell_trace
+from .timeseries import (TimeSeries, cell_summary, peak_and_mean,
+                         sample, step_series)
+
+__all__ = [
+    "EVENT_SCHEMA_VERSION", "EventLog", "events_block", "resolve_events",
+    "chrome_trace", "events_jsonl", "write_cell_trace",
+    "TimeSeries", "cell_summary", "peak_and_mean", "sample", "step_series",
+]

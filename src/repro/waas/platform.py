@@ -11,11 +11,13 @@ comparison.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..core.engine import SimEngine
+from ..obs import timeseries as obs_ts
+from ..obs.events import EventLog
 from ..core.jax_engine import (BatchSimEngine, GridMember,
                                predistribute_workload)
 from ..core.scheduler import ALL_POLICIES, EBPSM, MSLBL_MW, Policy
@@ -37,6 +39,10 @@ class PlatformReport:
     sim: SimResult
     metrics: CellMetrics
     slice_mix: Dict[str, int]
+    #: Sampled-over-simulated-time summary from :mod:`repro.obs.timeseries`
+    #: (fleet/busy/utilization/cost-vs-budget curves); ``None`` unless the
+    #: run collected events (``run_platform(..., events=True)``).
+    series: Optional[Dict[str, object]] = None
 
     @property
     def policy(self) -> str:
@@ -99,14 +105,19 @@ def ml_stream(cfg: PlatformConfig, n_jobs: int, rate: float, seed: int,
 
 def run_platform(wfs: Sequence[Workflow], policy: Policy,
                  cfg: Optional[PlatformConfig] = None,
-                 seed: int = 0) -> PlatformReport:
+                 seed: int = 0,
+                 events: Union[None, bool, EventLog] = None
+                 ) -> PlatformReport:
     cfg = cfg or slices.platform_config()
-    eng = SimEngine(cfg, policy, list(wfs), seed=seed, trace=True)
+    eng = SimEngine(cfg, policy, list(wfs), seed=seed, trace=True,
+                    events=events)
     sim = eng.run()
     return PlatformReport(
         sim=sim,
         metrics=CellMetrics.from_result(policy.name, sim, eng.trace_rows),
         slice_mix=dict(eng.pool.vm_count_by_type),
+        series=(obs_ts.cell_summary(eng.elog)
+                if eng.elog is not None else None),
     )
 
 

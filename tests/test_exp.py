@@ -169,12 +169,17 @@ def test_run_grid_workers_matches_serial():
         n_workflows=3,
         sizes=("small",),
     )
-    serial = exp_run.run_grid(two, cells_per_batch=1)
-    par = exp_run.run_grid(two, cells_per_batch=1, workers=2)
+    serial = exp_run.run_grid(two, cells_per_batch=1, events=True)
+    par = exp_run.run_grid(two, cells_per_batch=1, workers=2, events=True)
     assert par["workers"] == 2
     assert par["cells"] == serial["cells"]
     assert par["summary_by_policy"] == serial["summary_by_policy"]
+    # Dispatch equality now also covers the merged obs events block
+    # (_merge_stats sums by-kind counts across worker processes).
     assert par["dispatch"] == serial["dispatch"]
+    ev = par["dispatch"]["events"]
+    assert ev["enabled"] and ev["total"] > 0 and ev["dropped"] == 0
+    assert ev["by_kind"]["task_start"] == ev["by_kind"]["task_finish"]
 
 
 # ---------------------------------------------------------------------------

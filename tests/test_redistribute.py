@@ -247,14 +247,13 @@ def test_cross_engine_parity(mode):
     assert _key(bat.results[0]) == _key(seq)
 
 
-def test_round_mode_coalesces_events(monkeypatch):
-    monkeypatch.setenv("REPRO_PROFILE", "1")
+def test_round_mode_coalesces_events():
     wl = cell_workload(CFG, "cybershake", 8.0, (0.0, 0.25), seed=1,
                        n_workflows=8, sizes=("medium",))
 
     def prof(mode):
         eng = SimEngine(CFG, EBPSM, [w.clone() for w in wl], seed=0,
-                        redistribute=mode)
+                        redistribute=mode, profile=True)
         eng.run()
         return eng.profile
 

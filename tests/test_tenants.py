@@ -303,7 +303,7 @@ def test_assign_budgets_uniform_bounds():
 
 
 # ---------------------------------------------------------------------------
-# REPRO_PROFILE=1 per-phase counters (core.engine satellite)
+# profile=True per-phase counters (core.engine satellite)
 # ---------------------------------------------------------------------------
 
 
@@ -311,12 +311,12 @@ def test_profile_counters_opt_in(monkeypatch):
     tw = TINY_MIX.build(CFG, seed=0)
     eng = SimEngine(CFG, EBPSM, tw.workflows, seed=0)
     assert eng.profile is None           # off by default
-    monkeypatch.setenv("REPRO_PROFILE", "1")
+    # The per-engine kwarg opts in without touching os.environ ...
     members = [(EBPSM, TenantMix(TINY_MIX.tenants[:1]).build(
         CFG, seed=0).workflows, 0)]
-    beng = BatchSimEngine(CFG, members, batched="auto")
+    beng = BatchSimEngine(CFG, members, batched="auto", profile=True)
     ref = SimEngine(CFG, EBPSM, TenantMix(TINY_MIX.tenants[:1]).build(
-        CFG, seed=0).workflows, seed=0)
+        CFG, seed=0).workflows, seed=0, profile=True)
     res_b = beng.run()[0]
     res_r = ref.run()
     # Profiling must not perturb results.
@@ -329,7 +329,16 @@ def test_profile_counters_opt_in(monkeypatch):
     assert prof["distributions"] == 4    # one Algorithm-1 run per workflow
     assert prof["selects"] > 0
     assert 0.0 <= prof["redistribute_share_of_wall"] <= 1.0
+    # ... and self-reports its own instrumentation cost.
+    assert prof["profile_overhead_s"] >= 0.0
+    assert prof["profile_overhead_s"] < prof["engine_wall_s"] + 1e-9
     assert ref.profile is not None and ref.profile["redistributions"] > 0
+    # ... while REPRO_PROFILE=1 stays the ambient default source.
+    monkeypatch.setenv("REPRO_PROFILE", "1")
+    env_eng = SimEngine(CFG, EBPSM, tw.workflows, seed=0)
+    assert env_eng.profile is not None
+    assert SimEngine(CFG, EBPSM, tw.workflows, seed=0,
+                     profile=False).profile is None
 
 
 # ---------------------------------------------------------------------------

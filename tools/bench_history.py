@@ -1,0 +1,154 @@
+"""Benchmark trend table — ingest ``BENCH_*.json`` artifacts.
+
+``python tools/bench_history.py [DIR ...] [--out FILE]``
+
+Scans the given directories (default: ``artifacts/bench`` and
+``artifacts/exp``) for the benchmark artifacts the suite emits
+(``benchmarks/run.py``, ``repro.exp.run``) and prints one markdown
+trend table: current headline numbers next to the recorded historical
+references baked into each artifact (the PR-3 grid wall, the
+pre-array-path Algorithm-3 share), with the delta.
+
+Informational only — always exits 0; the gating lives in
+``benchmarks/check_speedup.py`` and the CI workflow.  ``--out``
+additionally writes the table to a file (CI appends it to the job
+summary).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+DEFAULT_DIRS = ("artifacts/bench", "artifacts/exp")
+
+#: rows: (bench name, metric label, extractor, reference extractor)
+#: extractors return None when the artifact doesn't carry the field —
+#: the row degrades to "n/a" instead of failing on older artifacts.
+
+
+def _get(d: Dict, *path):
+    for key in path:
+        if not isinstance(d, dict) or key not in d:
+            return None
+        d = d[key]
+    return d
+
+
+def _fmt(v: Optional[float], unit: str = "") -> str:
+    if v is None:
+        return "n/a"
+    if isinstance(v, float):
+        return f"{v:.4g}{unit}"
+    return f"{v}{unit}"
+
+
+def _delta(cur: Optional[float], ref: Optional[float],
+           lower_is_better: bool = False) -> str:
+    if cur is None or ref is None or not ref:
+        return ""
+    pct = (cur - ref) / ref * 100.0
+    arrow = ""
+    if abs(pct) >= 0.05:
+        better = (pct < 0) if lower_is_better else (pct > 0)
+        arrow = " ✓" if better else " ✗"
+    return f"{pct:+.1f}%{arrow}"
+
+
+def rows_for(doc: Dict, path: str) -> List[List[str]]:
+    bench = doc.get("bench", os.path.basename(path))
+    out: List[List[str]] = []
+
+    def row(metric, cur, ref, ref_label, lower_is_better=False, unit=""):
+        out.append([bench, metric, _fmt(cur, unit), _fmt(ref, unit),
+                    ref_label, _delta(cur, ref, lower_is_better)])
+
+    if bench == "grid_wall":
+        row("serial wall", _get(doc, "wall_serial_s"),
+            _get(doc, "pr3_reference", "wall_s"),
+            f"PR3 @{_get(doc, 'pr3_reference', 'commit') or '?'}",
+            lower_is_better=True, unit="s")
+        row("speedup vs PR3", _get(doc, "speedup_vs_pr3_reference"),
+            1.0, "parity")
+        row("redistribute share (heavy)",
+            _get(doc, "redistribution", "heavy", "share"),
+            _get(doc, "redistribution", "pre_array_reference", "share"),
+            "pre-array scalar", lower_is_better=True)
+    elif bench == "makespan":
+        row("batched vs ref speedup", _get(doc, "speedup_batched_vs_ref"),
+            1.0, "sequential oracle")
+        row("batched wall", _get(doc, "batched_wall_s"),
+            _get(doc, "ref_wall_s"), "sequential oracle",
+            lower_is_better=True, unit="s")
+    elif bench == "stream_scale":
+        row("object/SoA peak RSS ratio",
+            _get(doc, "state_footprint", "object_over_soa_peak_ratio"),
+            1.0, "parity")
+        row("object/SoA wall @max members",
+            _get(doc, "wall_object_over_soa_at_max"), 1.0, "parity")
+    elif bench == "paper_grid":
+        row("grid wall", _get(doc, "wall_s"), None, "", unit="s")
+        row("EBPSM/MSLBL makespan ratio",
+            _get(doc, "ebpsm_vs_mslbl_makespan_ratio"), 1.0,
+            "MSLBL parity", lower_is_better=True)
+        met = _get(doc, "summary_by_policy", "EBPSM", "budget_met_min")
+        row("EBPSM budget-met (min)", met,
+            _get(doc, "ebpsm_budget_met_floor"), "CI floor")
+    else:
+        # Unknown artifact: surface its scalar numerics so new benches
+        # show up in the trend table without a code change here.
+        for key in sorted(doc):
+            v = doc[key]
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                row(key, v, None, "")
+    return out
+
+
+def build_table(dirs: List[str]) -> str:
+    files: List[str] = []
+    for d in dirs:
+        files.extend(sorted(glob.glob(os.path.join(d, "BENCH_*.json"))))
+    lines = ["| bench | metric | current | reference | ref source | delta |",
+             "|---|---|---|---|---|---|"]
+    n_rows = 0
+    for path in files:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            lines.append(f"| {os.path.basename(path)} | unreadable ({e}) "
+                         "| | | | |")
+            continue
+        for r in rows_for(doc, path):
+            lines.append("| " + " | ".join(r) + " |")
+            n_rows += 1
+    if not files:
+        return ("bench_history: no BENCH_*.json artifacts under "
+                + ", ".join(dirs)
+                + " (run benchmarks/run.py or repro.exp.run first)\n")
+    header = (f"### Benchmark trend ({n_rows} metrics from "
+              f"{len(files)} artifact(s))\n\n")
+    return header + "\n".join(lines) + "\n"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("dirs", nargs="*", default=list(DEFAULT_DIRS),
+                    help="directories to scan for BENCH_*.json "
+                         f"(default: {' '.join(DEFAULT_DIRS)})")
+    ap.add_argument("--out", default=None,
+                    help="also write the markdown table to this file")
+    args = ap.parse_args(argv)
+    table = build_table(args.dirs or list(DEFAULT_DIRS))
+    print(table, end="")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(table)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

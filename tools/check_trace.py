@@ -1,0 +1,180 @@
+"""Trace-schema validator — CI gate for ``repro.obs`` exports.
+
+``python tools/check_trace.py PATH [PATH ...]``
+
+Each PATH is a ``*.trace.json`` / ``*.events.jsonl`` file or a
+directory scanned (non-recursively) for both.  Validates against the
+versioned schema in :mod:`repro.obs.events` / :mod:`repro.obs.export`:
+
+* **Chrome traces** (``*.trace.json``): top-level ``traceEvents`` is a
+  non-empty list; ``metadata.schema == "repro-obs-trace"`` with a
+  ``version`` this checker understands; every event has ``ph`` in
+  {M, X, C} with integer ``pid``/``tid``; slice (``X``) and counter
+  (``C``) events carry non-negative integer ``ts`` (and ``dur`` for
+  slices); counter events carry a numeric ``args.value``.
+* **Event dumps** (``*.events.jsonl``): first line is a header with
+  ``schema == "repro-obs-events"``, a known ``version`` and an
+  ``n_events`` matching the number of body lines; every body line has
+  a ``kind`` from ``events.KIND_NAMES``, an integer ``t_ms >= 0`` and
+  exactly the fields ``events.SCHEMA`` declares for that kind.
+
+Exit codes: 0 = all files valid, 1 = validation failures (one line
+each), 2 = no trace files found under the given paths.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterator, List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs.events import EVENT_SCHEMA_VERSION, KIND_NAMES, SCHEMA  # noqa: E402
+from repro.obs.export import EVENTS_SCHEMA, TRACE_SCHEMA  # noqa: E402
+
+# kind name -> expected field names (beyond kind/t_ms), from the column
+# schema the exporter writes.
+_FIELDS_OF = {KIND_NAMES[k]: tuple(name for name, _col in spec)
+              for k, spec in SCHEMA.items()}
+
+
+def _iter_files(paths: List[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isdir(p):
+            for name in sorted(os.listdir(p)):
+                if name.endswith(".trace.json") or name.endswith(
+                        ".events.jsonl"):
+                    yield os.path.join(p, name)
+        else:
+            yield p
+
+
+def _is_int(v: object) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
+def check_trace_json(path: str) -> List[str]:
+    errs: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable JSON ({e})"]
+    meta = doc.get("metadata")
+    if not isinstance(meta, dict) or meta.get("schema") != TRACE_SCHEMA:
+        errs.append(f"{path}: metadata.schema != {TRACE_SCHEMA!r}")
+    elif not (_is_int(meta.get("version"))
+              and 1 <= meta["version"] <= EVENT_SCHEMA_VERSION):
+        errs.append(f"{path}: unsupported metadata.version "
+                    f"{meta.get('version')!r}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        errs.append(f"{path}: traceEvents missing or empty")
+        return errs
+    for i, e in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(e, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in ("M", "X", "C"):
+            errs.append(f"{where}: unexpected ph {ph!r}")
+            continue
+        if not (_is_int(e.get("pid")) and _is_int(e.get("tid"))):
+            errs.append(f"{where}: pid/tid must be ints")
+        if ph in ("X", "C"):
+            if not (_is_int(e.get("ts")) and e["ts"] >= 0):
+                errs.append(f"{where}: ts must be a non-negative int")
+            if not isinstance(e.get("args"), dict):
+                errs.append(f"{where}: args must be an object")
+        if ph == "X" and not (_is_int(e.get("dur")) and e["dur"] >= 0):
+            errs.append(f"{where}: dur must be a non-negative int")
+        if ph == "C":
+            v = e.get("args", {}).get("value")
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                errs.append(f"{where}: counter args.value must be numeric")
+    return errs
+
+
+def check_events_jsonl(path: str) -> List[str]:
+    errs: List[str] = []
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        return [f"{path}: unreadable ({e})"]
+    if not lines:
+        return [f"{path}: empty file"]
+    try:
+        header = json.loads(lines[0])
+    except json.JSONDecodeError as e:
+        return [f"{path}: header line is not JSON ({e})"]
+    if header.get("schema") != EVENTS_SCHEMA:
+        errs.append(f"{path}: header schema != {EVENTS_SCHEMA!r}")
+    elif not (_is_int(header.get("version"))
+              and 1 <= header["version"] <= EVENT_SCHEMA_VERSION):
+        errs.append(f"{path}: unsupported header version "
+                    f"{header.get('version')!r}")
+    body = lines[1:]
+    if header.get("n_events") != len(body):
+        errs.append(f"{path}: header n_events={header.get('n_events')!r} "
+                    f"but {len(body)} event lines")
+    for i, line in enumerate(body, start=2):
+        where = f"{path}:{i}"
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError as e:
+            errs.append(f"{where}: not JSON ({e})")
+            continue
+        kind = row.get("kind")
+        if kind not in _FIELDS_OF:
+            errs.append(f"{where}: unknown kind {kind!r}")
+            continue
+        if not (_is_int(row.get("t_ms")) and row["t_ms"] >= 0):
+            errs.append(f"{where}: t_ms must be a non-negative int")
+        want = set(_FIELDS_OF[kind]) | {"kind", "t_ms"}
+        got = set(row)
+        if got != want:
+            missing = sorted(want - got)
+            extra = sorted(got - want)
+            errs.append(f"{where}: kind {kind!r} fields mismatch "
+                        f"(missing={missing}, extra={extra})")
+    return errs
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+",
+                    help="trace files or directories to validate")
+    args = ap.parse_args(argv)
+    files = list(_iter_files(args.paths))
+    if not files:
+        print("check_trace: no *.trace.json / *.events.jsonl files found",
+              file=sys.stderr)
+        return 2
+    failures: List[str] = []
+    checked: List[Tuple[str, int]] = []
+    for path in files:
+        if path.endswith(".events.jsonl"):
+            errs = check_events_jsonl(path)
+        else:
+            errs = check_trace_json(path)
+        failures.extend(errs)
+        checked.append((path, len(errs)))
+    for path, n in checked:
+        print(f"  {'FAIL' if n else 'ok  '} {path}")
+    if failures:
+        print(f"\ncheck_trace: {len(failures)} problem(s):", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"check_trace: {len(checked)} file(s) valid "
+          f"(schema v{EVENT_SCHEMA_VERSION})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
