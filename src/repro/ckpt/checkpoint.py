@@ -37,8 +37,10 @@ PyTree = Any
 
 # Manifest schema version for ``kind="stream"`` checkpoints.  Bump when
 # the array block / residue contract changes; ``restore_stream`` refuses
-# manifests newer than this.
-STREAM_SCHEMA_VERSION = 1
+# manifests newer than this.  v2: chaos residue (attempt/preemption
+# counters + injection tallies) — v1 snapshots still restore (benign
+# defaults fill the missing keys).
+STREAM_SCHEMA_VERSION = 2
 
 
 def _flatten(tree: PyTree) -> List[Tuple[str, Any]]:

@@ -557,6 +557,18 @@ class RedistState:
         if self._top_list is not None:
             self.top_sum -= self._top_list[tid]
 
+    def mark_unscheduled(self, tid: int) -> None:
+        """Exact inverse of :meth:`mark_scheduled` — readmit a requeued
+        task (chaos re-execution) into the redistribution pool."""
+        self.mask[self.pos_of[tid]] = True
+        self._rows = None
+        self._rows_list = None
+        self._want = None
+        self._cum = None
+        self._tcr = None
+        if self._top_list is not None:
+            self.top_sum += self._top_list[tid]
+
     def rows(self) -> np.ndarray:
         """Unscheduled tids in rank order (the compress of S)."""
         r = self._rows

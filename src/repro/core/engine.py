@@ -42,12 +42,14 @@ from .types import (
     WorkflowResult,
     degradation_tables,
 )
+from ..chaos import ChaosConfig, chaos_draws
 from ..obs import events as obs_events
 from ..obs import timeseries as obs_ts
 from ..obs.events import EventLog
-from ..sim.cloud import VM, VM_IDLE, VM_PROVISIONING, DataKey, VMPool
+from ..sim.cloud import (VM, VM_BUSY, VM_IDLE, VM_PROVISIONING,
+                         VM_TERMINATED, DataKey, VMPool)
 
-ARRIVAL, FINISH, VM_READY, REAP = 0, 1, 2, 3
+ARRIVAL, FINISH, VM_READY, REAP, REVOKE = 0, 1, 2, 3, 4
 
 # Auction engagement threshold for a solo SimEngine cycle (queue × pool
 # pair count).  The grid engine amortizes device calls across members and
@@ -79,7 +81,9 @@ def _object_state_forced() -> bool:
 
 # Version tag for SimState.snapshot() payloads (bumped on layout
 # changes; repro.ckpt.checkpoint.restore_stream refuses newer ones).
-STREAM_SNAPSHOT_VERSION = 1
+# v2: chaos residue (attempt/preemption counters, injection tallies) and
+#     the extended _Running fields (start_ms, rt_ms, est_rt_ms).
+STREAM_SNAPSHOT_VERSION = 2
 
 
 def new_profile() -> Dict[str, float]:
@@ -164,6 +168,10 @@ class _WfState:
 
     def discard_unscheduled(self, tid: int) -> None:
         self.unscheduled.discard(tid)
+
+    def add_unscheduled(self, tid: int) -> None:
+        """Chaos re-execution: a revoked/failed task rejoins the pool."""
+        self.unscheduled.add(tid)
 
     def dec_pending(self, child: int) -> bool:
         """Decrement the child's pending-parent count; True ⇒ released."""
@@ -264,6 +272,9 @@ class _WfView:
     def discard_unscheduled(self, tid: int) -> None:
         self._ss.unscheduled[self._t0 + tid] = False
 
+    def add_unscheduled(self, tid: int) -> None:
+        self._ss.unscheduled[self._t0 + tid] = True
+
     def dec_pending(self, child: int) -> bool:
         pp = self._ss.pending_parents
         i = self._t0 + child
@@ -288,6 +299,13 @@ class _Running:
     vm: VM
     triggered_provision: bool
     actual_cost: float = 0.0
+    # Chaos bookkeeping (set only when injection is enabled): pipeline
+    # start for pro-rated revocation billing, the (possibly inflated)
+    # compute leg and its undegraded estimate for straggler detection.
+    start_ms: int = 0
+    end_ms: int = 0
+    rt_ms: int = 0
+    est_rt_ms: int = 0
 
 
 class SimState:
@@ -311,6 +329,7 @@ class SimState:
         stream: Optional[StreamState] = None,
         profile: Optional[bool] = None,
         events: Union[None, bool, EventLog] = None,
+        chaos: Optional[ChaosConfig] = None,
     ):
         """``predistributed``: wid → spare budget for workflows whose
         arrival-time budget distribution (Algorithm 1 / MSLBL) already ran
@@ -347,7 +366,13 @@ class SimState:
         ``REPRO_TRACE=1``; True allocates a fresh log; a log instance
         is used as-is.  Off ⇒ ``self.elog is None`` and every emission
         site is a single attribute-load + None check (same zero-cost
-        discipline as ``profile``)."""
+        discipline as ``profile``).
+
+        ``chaos``: optional :class:`repro.chaos.ChaosConfig` — spot
+        revocation, task-failure and straggler injection (deterministic
+        in (seed, config); see repro.chaos).  ``None`` or an all-zero
+        config disables injection entirely: ``self.chaos is None`` and
+        every chaos branch is one attribute-load + None test."""
         if redistribute not in ("finish", "round"):
             raise ValueError(f"redistribute={redistribute!r} "
                              "(expected 'finish' or 'round')")
@@ -395,6 +420,22 @@ class SimState:
         self.cpu_deg = cpu_deg.tolist()
         self.bw_in_deg = bw_in_deg.tolist()
         self.bw_out_deg = bw_out_deg.tolist()
+        # Fault injection (repro.chaos): None unless a config with at
+        # least one live knob is passed; the draw tables are derived
+        # state (pure function of config × seed × total_tasks), while
+        # the attempt/preemption counters and injection tallies below
+        # are mutable state that rides the snapshot residue.
+        self.chaos: Optional[ChaosConfig] = (
+            chaos if chaos is not None and chaos.enabled else None)
+        self.chaos_draws = chaos_draws(self.chaos, total_tasks, seed)
+        self.task_attempts: Dict[Tuple[int, int], int] = {}
+        self.task_preempts: Dict[Tuple[int, int], int] = {}
+        self.revocations = 0
+        self.task_failures = 0
+        self.task_retries = 0
+        self.stragglers_detected = 0
+        self.wasted_cost = 0.0
+        self.spot_provisioned = 0
         self._task_base: Dict[int, int] = {}
         base = 0
         for w in self.workflows:
@@ -445,6 +486,9 @@ class SimState:
                 self._handle_vm_ready(payload[0])
             elif kind == REAP:
                 self._handle_reap(*payload)
+            elif kind == REVOKE:
+                # True (⇒ cycle) only when a task was requeued.
+                need_cycle |= self._handle_revoke(payload[0])
         return need_cycle
 
     def post_cycle(self) -> None:
@@ -508,12 +552,20 @@ class SimState:
         task.inputs_cache = ins
         return ins
 
-    def _handle_finish(self, wid: int, tid: int) -> None:
+    def _handle_finish(self, wid: int, tid: int, attempt: int = 0) -> None:
+        ch = self.chaos
+        if ch is not None \
+                and attempt != self.task_attempts.get((wid, tid), 0):
+            return  # stale FINISH of an attempt a revocation already killed
         run = self.running.pop((wid, tid))
         st = self.wf_state[wid]
         wf = st.wf
         task = wf.tasks[tid]
         vm = run.vm
+        if ch is not None and ch.fail_prob > 0.0 \
+                and self.chaos_draws.fails(self._gid(wid, tid), attempt):
+            self._fail_attempt(run, st, wid, tid, attempt)
+            return
         # Cache this task's output locally (the resource-sharing policy).
         vm.cache_put(self.cfg, ("out", wid, tid), task.out_mb,
                      self.pool.data_index)
@@ -530,6 +582,16 @@ class SimState:
             ev.append(obs_events.TASK_FINISH, self.now, wid, tid, vm.vmid,
                       x=actual)
             ev.append(obs_events.VM_IDLE, self.now, vm.vmid)
+        if ch is not None and run.rt_ms > ch.straggler_factor * run.est_rt_ms:
+            # Straggler detection: the *platform-observable* rule — the
+            # compute leg exceeded straggler_factor × the undegraded
+            # estimate — so natural degradation outliers can trip it too
+            # when the factor is set below the degradation ceiling.
+            self.stragglers_detected += 1
+            if ev is not None:
+                ev.append(obs_events.STRAGGLER_DETECT, self.now, wid, tid,
+                          vm.vmid, run.rt_ms,
+                          x=run.rt_ms / max(run.est_rt_ms, 1))
         if self.policy.budget_mode == "mslbl":
             st.spare += task.budget - actual
             if ev is not None:
@@ -583,6 +645,166 @@ class SimState:
 
     def _actual_cost_of(self, run: _Running) -> float:
         return run.actual_cost  # computed at dispatch time
+
+    # ---- chaos transitions (repro.chaos) ---------------------------------------
+    def _fail_attempt(self, run: _Running, st: Union["_WfState", "_WfView"],
+                      wid: int, tid: int, attempt: int) -> None:
+        """An execution attempt failed: the VM worked (and bills) in full
+        but produced no output — no cache_put, no child release; the task
+        requeues through the debt-absorbing path."""
+        vm = run.vm
+        self.pool.mark_idle(vm, self.now)
+        self.vm_bound.pop(vm.vmid, None)
+        self._arm_reap(vm)
+        actual = self._actual_cost_of(run)
+        self.task_failures += 1
+        self.task_attempts[(wid, tid)] = attempt + 1
+        ev = self.elog
+        if ev is not None:
+            ev.append(obs_events.TASK_FAIL, self.now, wid, tid, vm.vmid,
+                      attempt, x=actual)
+            ev.append(obs_events.VM_IDLE, self.now, vm.vmid)
+        self._requeue_task(st, wid, tid, actual)
+
+    def _requeue_task(self, st: Union["_WfState", "_WfView"], wid: int,
+                      tid: int, wasted: float) -> None:
+        """Put a killed/failed task back on the ready queue (its parents
+        all finished, so it is ready by construction).  The wasted spend
+        is real cost (Eq. 5 has no refunds) and is absorbed out of the
+        workflow's remaining budget pool via Algorithm 3."""
+        st.cost += wasted
+        self.wasted_cost += wasted
+        self.task_retries += 1
+        st.add_unscheduled(tid)
+        if st.redist is not None:
+            st.redist.mark_unscheduled(tid)
+        self._absorb_chaos_debt(st, wasted)
+        heapq.heappush(self.queue, (self.now, wid, tid))
+        if self.elog is not None:
+            key = (wid, tid)
+            self.elog.append(obs_events.TASK_RETRY, self.now, wid, tid,
+                             self.task_attempts.get(key, 0),
+                             self.task_preempts.get(key, 0))
+
+    def _absorb_chaos_debt(self, st: Union["_WfState", "_WfView"],
+                           amount: float) -> None:
+        """Charge wasted spend to the budget layer: MSLBL pays from its
+        spare pot; round-batched banking nets it against pending surplus;
+        per-finish Algorithm 3 runs a pooled redistribution with the
+        debt as negative surplus (spare + unscheduled sub-budgets absorb
+        it, clamped at zero — overruns show up as budget violations,
+        exactly like benign cost overruns)."""
+        if amount <= 0.0:
+            return
+        ev = self.elog
+        if self.policy.budget_mode == "mslbl":
+            st.spare -= amount
+            if ev is not None:
+                ev.append(obs_events.BUDGET_SPARE, self.now, st.wf.wid, -1,
+                          x=-amount, y=st.spare)
+        elif self.redistribute == "round":
+            st.pending_surplus -= amount
+            st.pending_events += 1
+            if self.profile is not None:
+                self.profile["redistribute_events"] += 1
+        else:
+            prof = self.profile
+            t0 = _time.perf_counter() if prof is not None else 0.0
+            if budget_mod._ARRAY_REDIST:
+                rd = st.redist
+                if rd is None:
+                    rd = st.make_redist(self.cfg)
+                st.spare = budget_mod.update_budget_pooled(
+                    self.cfg, st.wf, rd, -amount, st.spare
+                )
+            else:
+                st.spare = budget_mod.update_budget_pooled_scalar(
+                    self.cfg, st.wf, -amount, st.spare,
+                    st.unscheduled_seq()
+                )
+            if prof is not None:
+                prof["redistribute_s"] += _time.perf_counter() - t0
+                prof["redistributions"] += 1
+                prof["redistribute_events"] += 1
+            if ev is not None:
+                ev.append(obs_events.BUDGET_REDISTRIBUTE, self.now,
+                          st.wf.wid, -2, 1, x=-amount, y=st.spare)
+
+    def _handle_revoke(self, vmid: int) -> bool:
+        """A spot lease's drawn lifetime elapsed.  Kill the VM whatever
+        it was doing — the in-flight task's spend so far is sunk (billed
+        per started period at the spot price), its attempt is abandoned
+        (the stale FINISH event is invalidated by the attempt counter)
+        and it requeues through the normal auction path.  Returns True
+        iff a task was requeued (⇒ a scheduling cycle must follow)."""
+        vm = self.pool.vms[vmid]
+        if vm.status == VM_TERMINATED:
+            return False    # reaped/idle-closed before the lifetime elapsed
+        bound = self.vm_bound.pop(vmid, None)
+        self.revocations += 1
+        busy = 1 if vm.status == VM_BUSY else 0
+        wid = tid = -1
+        wasted = 0.0
+        st = None
+        if bound is not None:
+            wid, tid = bound
+            st = self.wf_state[wid]
+            run = self.running.pop((wid, tid), None)
+            if run is not None:
+                # Billing stops at the revocation: started periods of the
+                # elapsed pipeline (plus the provision delay the lease
+                # triggered, per the benign billing rule).
+                elapsed = self.now - run.start_ms
+                if run.triggered_provision:
+                    elapsed += self.cfg.vm_provision_delay_ms
+                if elapsed > 0:
+                    bp = self.cfg.billing_period_ms
+                    wasted = ((elapsed + bp - 1) // bp) * vm.price_per_bp
+                # The dispatch pre-charged the full pipeline to busy_ms;
+                # give back the part the revocation cut off.
+                vm.busy_ms -= max(0, run.end_ms - self.now)
+            key = (wid, tid)
+            self.task_attempts[key] = self.task_attempts.get(key, 0) + 1
+            self.task_preempts[key] = self.task_preempts.get(key, 0) + 1
+        self.pool.revoke(vm, self.now)
+        if self.elog is not None:
+            self.elog.append(obs_events.VM_REVOKE, self.now, vmid, wid, tid,
+                             busy, x=wasted)
+        if bound is not None:
+            self._requeue_task(st, wid, tid, wasted)
+        return bound is not None
+
+    def _provision_for(self, wid: int, tid: int, app: str,
+                       vmt_idx: int) -> VM:
+        """Provision a VM for a task that found no suitable idle one,
+        bind it, and arm its ready event.  Under spot pricing the lease
+        is discounted and carries a pre-drawn revocation deadline —
+        unless the task has been preempted ``escalate_after`` times
+        already, in which case it escalates to on-demand (full price,
+        non-revocable)."""
+        tag = self.policy.owner_tag(wid, app)
+        ch = self.chaos
+        if ch is None or not ch.spot_enabled or (
+                ch.escalate_after is not None
+                and self.task_preempts.get((wid, tid), 0)
+                >= ch.escalate_after):
+            vm = self.pool.provision(vmt_idx, self.now, tag)
+        else:
+            vmt = self.cfg.vm_types[vmt_idx]
+            vm = self.pool.provision(
+                vmt_idx, self.now, tag, spot=True,
+                price_per_bp=vmt.cost_per_bp * (1.0 - ch.spot_discount))
+            self.spot_provisioned += 1
+            if ch.revocation_rate > 0.0:
+                self._push(
+                    self.now + self.chaos_draws.vm_lifetime_ms(vm.vmid),
+                    REVOKE, (vm.vmid,))
+        self.vm_bound[vm.vmid] = (wid, tid)
+        self._push(vm.ready_ms, VM_READY, (vm.vmid,))
+        if self.elog is not None:
+            self.elog.append(obs_events.VM_PROVISION, self.now, vm.vmid,
+                             vm.vmt_idx)
+        return vm
 
     def _handle_vm_ready(self, vmid: int) -> None:
         vm = self.pool.vms[vmid]
@@ -718,13 +940,7 @@ class SimState:
                 self.vm_bound[vm.vmid] = (wid, tid)
                 self._start_pipeline(wid, tid, vm, triggered_provision=False)
             else:
-                tag = self.policy.owner_tag(wid, wf.app)
-                vm = self.pool.provision(placement.new_vmt_idx, self.now, tag)
-                self.vm_bound[vm.vmid] = (wid, tid)
-                self._push(vm.ready_ms, VM_READY, (vm.vmid,))
-                if ev is not None:
-                    ev.append(obs_events.VM_PROVISION, self.now, vm.vmid,
-                              vm.vmt_idx)
+                self._provision_for(wid, tid, wf.app, placement.new_vmt_idx)
             if self.trace_rows is not None:
                 self.trace_rows.append(
                     (self.now, wid, tid, placement.tier, placement.est_cost,
@@ -788,13 +1004,7 @@ class SimState:
                 self.vm_bound[vm.vmid] = (wid, tid)
                 self._start_pipeline(wid, tid, vm, triggered_provision=False)
             else:
-                tag = self.policy.owner_tag(wid, st.wf.app)
-                vm = self.pool.provision(p.new_vmt_idx, self.now, tag)
-                self.vm_bound[vm.vmid] = (wid, tid)
-                self._push(vm.ready_ms, VM_READY, (vm.vmid,))
-                if ev is not None:
-                    ev.append(obs_events.VM_PROVISION, self.now, vm.vmid,
-                              vm.vmt_idx)
+                self._provision_for(wid, tid, st.wf.app, p.new_vmt_idx)
             if self.trace_rows is not None:
                 self.trace_rows.append((self.now, wid, tid, p.tier,
                                         p.est_cost,
@@ -861,6 +1071,13 @@ class SimState:
         rt_ms = int(ceil(
             1000.0 * task.size_mi / (vmt.mips * (1.0 - self.cpu_deg[gid]))
             * tol))
+        ch = self.chaos
+        if ch is not None and ch.straggler_prob > 0.0 \
+                and self.chaos_draws.straggler[gid]:
+            # Injected straggler: the compute leg runs slowdown× on top
+            # of the benign degradation (every attempt — slowness models
+            # the task's pathology, not the VM's).
+            rt_ms = int(ceil(rt_ms * ch.straggler_slowdown))
         if task.out_mb > 0.0:
             bw = vmt.bandwidth_mbps * (1.0 - self.bw_out_deg[gid])
             out_ms = int(ceil(
@@ -875,10 +1092,24 @@ class SimState:
             cfg.vm_provision_delay_ms if triggered_provision else 0
         )
         bp = cfg.billing_period_ms
-        actual_cost = ((billed + bp - 1) // bp) * vmt.cost_per_bp
+        # Bills at the lease's own rate: identical to vmt.cost_per_bp on
+        # on-demand VMs, discounted on spot leases (repro.chaos).
+        actual_cost = ((billed + bp - 1) // bp) * vm.price_per_bp
         run = _Running(wid, tid, vm, triggered_provision, actual_cost)
         self.running[(wid, tid)] = run
-        self._push(finish, FINISH, (wid, tid))
+        if ch is None:
+            self._push(finish, FINISH, (wid, tid))
+        else:
+            # Chaos bookkeeping: pro-rated revocation billing needs the
+            # pipeline bounds, straggler detection the compute legs, and
+            # the FINISH payload pins the attempt so a revocation's
+            # stale event can be told apart from the live re-execution.
+            run.start_ms = self.now
+            run.end_ms = finish
+            run.rt_ms = rt_ms
+            run.est_rt_ms = costs.runtime_ms(vmt, task.size_mi)
+            self._push(finish, FINISH,
+                       (wid, tid, self.task_attempts.get((wid, tid), 0)))
         ev = self.elog
         if ev is not None:
             ev.append(obs_events.VM_BUSY, self.now, vm.vmid)
@@ -949,6 +1180,12 @@ class SimState:
             container_cold=self.container_cold,
             peak_vms=peak_vms,
             mean_fleet_vms=mean_fleet,
+            revocations=self.revocations,
+            task_failures=self.task_failures,
+            task_retries=self.task_retries,
+            stragglers_detected=self.stragglers_detected,
+            wasted_cost=self.wasted_cost,
+            spot_vms=self.spot_provisioned,
         )
 
 
@@ -1017,6 +1254,15 @@ class SimState:
             "container_cold": self.container_cold,
             "profile": self.profile,
             "elog": self.elog,
+            # Chaos mutable state (v2): attempt/preemption counters and
+            # run tallies.  The draw tables are derived state — rebuilt
+            # bit-identically from (config, seed) at construction.
+            "task_attempts": self.task_attempts,
+            "task_preempts": self.task_preempts,
+            "chaos_counters": (
+                self.revocations, self.task_failures, self.task_retries,
+                self.stragglers_detected, self.wasted_cost,
+                self.spot_provisioned),
         }, protocol=_pickle.HIGHEST_PROTOCOL)
         return {"arrays": arrays, "residue": residue,
                 "version": STREAM_SNAPSHOT_VERSION}
@@ -1090,6 +1336,13 @@ class SimState:
         # restored from the cut replaces whatever the constructor made,
         # so resumed traces are byte-identical with uninterrupted runs.
         self.elog = residue.get("elog")
+        # v1 snapshots (pre-chaos) default to the benign zeros.
+        self.task_attempts = residue.get("task_attempts", {})
+        self.task_preempts = residue.get("task_preempts", {})
+        (self.revocations, self.task_failures, self.task_retries,
+         self.stragglers_detected, self.wasted_cost,
+         self.spot_provisioned) = residue.get(
+            "chaos_counters", (0, 0, 0, 0, 0.0, 0))
 
 
 class SimEngine(SimState):
@@ -1108,6 +1361,7 @@ class SimEngine(SimState):
         soa: Optional[bool] = None,
         profile: Optional[bool] = None,
         events: Union[None, bool, EventLog] = None,
+        chaos: Optional[ChaosConfig] = None,
     ):
         """``batched``: True / False / "auto" — use the JAX batched
         scheduling cycle (core.jax_cycles) when the queue×pool product is
@@ -1116,11 +1370,14 @@ class SimEngine(SimState):
 
         ``profile`` / ``events``: per-engine toggles for the phase
         counters and the structured event log (None defers to
-        ``REPRO_PROFILE`` / ``REPRO_TRACE``; see :class:`SimState`)."""
+        ``REPRO_PROFILE`` / ``REPRO_TRACE``; see :class:`SimState`).
+
+        ``chaos``: fault-injection knobs (:class:`repro.chaos.ChaosConfig`);
+        None or all-zero ⇒ the benign engine, bit-for-bit."""
         super().__init__(cfg, policy, workflows, seed=seed, trace=trace,
                          predistributed=predistributed,
                          redistribute=redistribute, soa=soa,
-                         profile=profile, events=events)
+                         profile=profile, events=events, chaos=chaos)
         self.batched = batched
 
     # ---- main loop -----------------------------------------------------------

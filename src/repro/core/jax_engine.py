@@ -58,6 +58,7 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
 import numpy as np
 
 from . import budget as budget_mod
+from ..chaos import ChaosConfig
 from .engine import (STREAM_SNAPSHOT_VERSION, SimState,
                      _object_state_forced, profile_overhead_s)
 from .jax_cycles import CycleRequest, multi_cycle
@@ -111,6 +112,7 @@ class BatchSimEngine:
         soa: Optional[bool] = None,
         profile: Optional[bool] = None,
         events: Optional[bool] = None,
+        chaos: Optional[ChaosConfig] = None,
     ):
         """``batched``: False / True / "auto" / "member".
 
@@ -156,7 +158,12 @@ class BatchSimEngine:
         ``repro.exp.run --trace-dir``) and the driver keeps a separate
         :class:`EventLog` of grid-level events — rendezvous rounds and
         batched auction calls, timestamped by round index (driver events
-        span members, so no single simulated clock applies)."""
+        span members, so no single simulated clock applies).
+
+        ``chaos``: fault-injection knobs (:class:`repro.chaos.ChaosConfig`)
+        applied to every member — each member's draws are keyed by its own
+        seed, and injections stay bit-exact with a ``SimEngine`` run of
+        the same (policy, workflows, seed, chaos)."""
         self.cfg = cfg
         self.use_pallas = use_pallas
         self.batched = batched
@@ -184,7 +191,7 @@ class BatchSimEngine:
             SimState(cfg, policy, workflows, seed=seed, trace=trace,
                      predistributed=p, redistribute=redistribute,
                      soa=soa_resolved, stream=v, profile=profile,
-                     events=ev_enabled)
+                     events=ev_enabled, chaos=chaos)
             for ((policy, workflows, seed), p, v) in zip(members, pre, views)
         ]
         self._resumed = False
@@ -516,6 +523,7 @@ def simulate_batch(
     soa: Optional[bool] = None,
     profile: Optional[bool] = None,
     events: Optional[bool] = None,
+    chaos: Optional[ChaosConfig] = None,
 ) -> BatchResult:
     """Evaluate the full grid policies × workloads × seeds in one batched
     engine run.
@@ -548,7 +556,7 @@ def simulate_batch(
     engine = BatchSimEngine(cfg, members, trace=trace, use_pallas=use_pallas,
                             batched=batched, predistributed=pre,
                             redistribute=redistribute, soa=soa,
-                            profile=profile, events=events)
+                            profile=profile, events=events, chaos=chaos)
     results = engine.run()
     entries = [
         GridEntry(policy=name, workload=wi, seed=s, result=res)

@@ -369,6 +369,18 @@ class SimResult:
     # intervals at finalize time.
     peak_vms: int = 0
     mean_fleet_vms: float = 0.0
+    # Fault-injection tallies (repro.chaos) — zeros on benign runs:
+    # spot-lease revocations, failed execution attempts, total task
+    # re-executions (failures + preemption-killed attempts), stragglers
+    # the platform detected, cost sunk into attempts that produced no
+    # output (already included in each workflow's cost — Eq. 5 has no
+    # refunds), and spot leases provisioned.
+    revocations: int = 0
+    task_failures: int = 0
+    task_retries: int = 0
+    stragglers_detected: int = 0
+    wasted_cost: float = 0.0
+    spot_vms: int = 0
 
     @property
     def avg_vm_utilization(self) -> float:

@@ -56,6 +56,17 @@ class CellMetrics:
     # {name: {n, budget_met, mean_makespan_s, p50_slowdown, p95_slowdown}}.
     by_tenant: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     by_qos: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    # ---- fault-injection tallies (repro.chaos; zeros on benign runs).
+    # wasted_spend_frac = cost sunk into attempts that produced no output
+    # ÷ total spend of all workflows (both unfiltered by warm-up — waste
+    # is a whole-run platform quantity, not a per-workflow statistic).
+    revocations: int = 0
+    task_failures: int = 0
+    task_retries: int = 0
+    stragglers_detected: int = 0
+    wasted_cost: float = 0.0
+    wasted_spend_frac: float = 0.0
+    spot_vms: int = 0
 
     @staticmethod
     def _group_stats(rows: List[tuple]) -> Dict:
@@ -137,6 +148,7 @@ class CellMetrics:
         # Budget-met over the post-warmup set (res.budget_met_fraction
         # would include warm-up workflows).
         met = float(np.mean([w.budget_met for w in wfs])) if wfs else 1.0
+        total_spend = float(sum(w.cost for w in res.workflows))
         return cls(
             policy=policy,
             n_workflows=len(wfs),
@@ -159,6 +171,14 @@ class CellMetrics:
             n_warmup_excluded=n_excluded,
             by_tenant=by_tenant,
             by_qos=by_qos,
+            revocations=res.revocations,
+            task_failures=res.task_failures,
+            task_retries=res.task_retries,
+            stragglers_detected=res.stragglers_detected,
+            wasted_cost=res.wasted_cost,
+            wasted_spend_frac=(res.wasted_cost / total_spend
+                               if total_spend > 0 else 0.0),
+            spot_vms=res.spot_vms,
         )
 
     @property
@@ -219,5 +239,16 @@ def aggregate_by_policy(cells: Sequence[CellMetrics]) -> Dict[str, Dict]:
             "p95_slowdown_mean": float(np.mean([m.p95_slowdown for m in ms])),
             "jain_fairness_min": float(np.min([m.jain_fairness for m in ms])),
             "peak_vms_max": int(np.max([m.peak_vms for m in ms])),
+            # Chaos tallies (zeros on benign runs).
+            "revocations_total": int(np.sum([m.revocations for m in ms])),
+            "task_failures_total": int(np.sum([m.task_failures
+                                               for m in ms])),
+            "task_retries_total": int(np.sum([m.task_retries for m in ms])),
+            "stragglers_total": int(np.sum([m.stragglers_detected
+                                            for m in ms])),
+            "wasted_spend_frac_mean": float(
+                np.mean([m.wasted_spend_frac for m in ms])),
+            "wasted_spend_frac_max": float(
+                np.max([m.wasted_spend_frac for m in ms])),
         }
     return out

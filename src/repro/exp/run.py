@@ -426,7 +426,8 @@ def run_online(
         engine = BatchSimEngine(cfg, members, trace=trace,
                                 predistributed=pre, use_pallas=use_pallas,
                                 batched=batched, redistribute=redistribute,
-                                events=bool(events or trace_dir))
+                                events=bool(events or trace_dir),
+                                chaos=scenario.chaos)
         if resume_snap is not None:
             engine.load_snapshot(resume_snap)
             resume_snap = None
@@ -472,6 +473,8 @@ def run_online(
         scenario_kind="online",
         warmup_s=scenario.warmup_s,
         p95_slowdown_ceiling=scenario.p95_slowdown_ceiling,
+        wasted_spend_ceiling=scenario.wasted_spend_ceiling,
+        chaos=scenario.chaos.knobs() if scenario.chaos else None,
         tenants=[{
             "name": t.name,
             "qos": t.qos.name,
@@ -487,12 +490,14 @@ def run_online(
 
 
 def check_floors(art: Dict) -> List[str]:
-    """CI gate: EBPSM budget-met floor per cell, the p95-slowdown
-    ceiling (online scenarios that record one), and the headline
-    makespan win over MSLBL_MW (when both policies are in the grid)."""
+    """CI gate: EBPSM budget-met floor per cell, the p95-slowdown and
+    wasted-spend ceilings (online scenarios that record them), and the
+    headline makespan win over MSLBL_MW (when both policies are in the
+    grid)."""
     failures: List[str] = []
     floor = float(art.get("ebpsm_budget_met_floor", 0.0))
     ceiling = float(art.get("p95_slowdown_ceiling", 0.0))
+    waste_ceiling = float(art.get("wasted_spend_ceiling", 0.0))
     for row in art["cells"]:
         if row["policy"] != "EBPSM":
             continue
@@ -500,6 +505,14 @@ def check_floors(art: Dict) -> List[str]:
             failures.append(
                 f"EBPSM p95 slowdown {row['p95_slowdown']:.2f} > ceiling "
                 f"{ceiling:.2f} in cell app={row['app']} "
+                f"rate={row['rate_wf_per_min']} seed={row['seed']}"
+            )
+        if waste_ceiling > 0 and row.get("wasted_spend_frac", 0.0) \
+                > waste_ceiling + 1e-9:
+            failures.append(
+                f"EBPSM wasted-spend fraction "
+                f"{row['wasted_spend_frac']:.2%} > ceiling "
+                f"{waste_ceiling:.2%} in cell app={row['app']} "
                 f"rate={row['rate_wf_per_min']} seed={row['seed']}"
             )
         if row.get("n_workflows", 1) == 0:

@@ -16,8 +16,9 @@ policies × 1 seed) that the ``exp-smoke`` CI job gates on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Tuple, Union
+from typing import Dict, Iterator, Optional, Tuple, Union
 
+from ..chaos import ChaosConfig
 from ..core.scheduler import ALL_POLICIES, Policy
 from ..tenants import (BRONZE, GOLD, SILVER, Diurnal, MarkovModulated,
                        Poisson, Tenant, TenantMix)
@@ -158,6 +159,11 @@ class OnlineScenario:
     # CI ceiling on EBPSM's p95 workflow slowdown (0 = not gated).
     # Recorded from the artifact trajectory like the budget-met floor.
     p95_slowdown_ceiling: float = 0.0
+    # Fault-injection knobs (repro.chaos); None ⇒ the benign stream.
+    chaos: Optional[ChaosConfig] = None
+    # CI ceiling on EBPSM's wasted-spend fraction (cost sunk into killed/
+    # failed attempts ÷ total spend; 0 = not gated).
+    wasted_spend_ceiling: float = 0.0
 
     @property
     def n_workload_cells(self) -> int:
@@ -232,6 +238,60 @@ ONLINE_LONGHAUL_MIX = TenantMix((
            n_workflows=360, sizes=("small",)),
 ))
 
+# The chaos mixes stream ≥4 workflow families — montage + epigenomics +
+# cybershake (seismology-family calibration) + seismology traces plus the
+# synthetic generators — so injected churn hits heterogeneous DAG shapes.
+ONLINE_CHAOS_MIX = TenantMix((
+    Tenant("astro-survey", GOLD,
+           apps=("montage", "trace:montage-18"),
+           arrival=Poisson(10.0), n_workflows=20, sizes=("small",)),
+    Tenant("bio-lab", SILVER,
+           apps=("epigenome", "trace:epigenomics-20"),
+           arrival=Diurnal(4.0, 14.0, period_s=300.0),
+           n_workflows=16, sizes=("small",)),
+    Tenant("seismo-batch", BRONZE,
+           apps=("trace:cybershake-12", "trace:seismology-9"),
+           arrival=MarkovModulated(2.0, 20.0, mean_dwell_s=60.0),
+           n_workflows=20, sizes=("small",)),
+))
+
+ONLINE_CHAOS_HEAVY_MIX = TenantMix((
+    Tenant("astro-survey", GOLD,
+           apps=("montage", "cybershake", "trace:montage-18"),
+           arrival=Poisson(12.0), n_workflows=36,
+           sizes=("small", "medium")),
+    Tenant("bio-lab", GOLD,
+           apps=("epigenome", "trace:epigenomics-20"),
+           arrival=Diurnal(4.0, 16.0, period_s=1800.0),
+           n_workflows=28, sizes=("small", "medium")),
+    Tenant("grav-obs", SILVER,
+           apps=("ligo", "trace:cybershake-12"),
+           arrival=MarkovModulated(2.0, 20.0, mean_dwell_s=120.0),
+           n_workflows=28, sizes=("small", "medium")),
+    Tenant("seismo-batch", BRONZE,
+           apps=("sipht", "trace:seismology-9"),
+           arrival=MarkovModulated(1.0, 24.0, mean_dwell_s=90.0),
+           n_workflows=36, sizes=("small",)),
+))
+
+# The CI-gated chaos knobs: 60 % spot discount with a 6/hour revocation
+# process, 2 % per-attempt failures (≤ 3 retries, on-demand escalation
+# after 2 preemptions) and 5 % stragglers at 4× slowdown, detected at 2×
+# the undegraded estimate.
+CHAOS_SMOKE = ChaosConfig(
+    spot_discount=0.6, revocation_rate=6.0,
+    fail_prob=0.02, max_retries=3, escalate_after=2,
+    straggler_prob=0.05, straggler_slowdown=4.0, straggler_factor=2.0,
+)
+
+# The heavy family doubles the churn: mean spot lifetime 5 simulated
+# minutes, 5 % failures, 10 % stragglers.
+CHAOS_HEAVY = ChaosConfig(
+    spot_discount=0.6, revocation_rate=12.0,
+    fail_prob=0.05, max_retries=3, escalate_after=2,
+    straggler_prob=0.10, straggler_slowdown=4.0, straggler_factor=2.0,
+)
+
 ONLINE_SCENARIOS: Dict[str, OnlineScenario] = {
     "online-smoke": OnlineScenario(
         name="online-smoke",
@@ -272,6 +332,41 @@ ONLINE_SCENARIOS: Dict[str, OnlineScenario] = {
         # (seed 0); floors leave ~3 pp / ~18 % headroom.
         ebpsm_budget_met_floor=0.95,
         p95_slowdown_ceiling=12.0,
+    ),
+    "online-chaos-smoke": OnlineScenario(
+        name="online-chaos-smoke",
+        description=("CI-sized adversarial-infrastructure mix: 3 tenants "
+                     "across 4 workflow families (montage/epigenomics/"
+                     "cybershake/seismology) under spot revocation "
+                     "(60 % discount, 6/h churn), 2 % task failures and "
+                     "5 % injected stragglers; gates EBPSM budget-met "
+                     "and wasted-spend under churn."),
+        mix=ONLINE_CHAOS_MIX,
+        policies=ALL_POLICY_NAMES,
+        seeds=(0,),
+        warmup_s=30.0,
+        chaos=CHAOS_SMOKE,
+        # Recorded trajectory (seed 0): budget_met 0.971, wasted-spend
+        # frac 0.073 — floors leave headroom for scheduling drift while
+        # still catching absorbed-debt regressions.
+        ebpsm_budget_met_floor=0.85,
+        wasted_spend_ceiling=0.12,
+    ),
+    "online-chaos": OnlineScenario(
+        name="online-chaos",
+        description=("Full adversarial-infrastructure stress: 4 tenants, "
+                     "128 workflows across 6 families, 12/h spot churn, "
+                     "5 % failures, 10 % stragglers at 4x, 2 seeds — "
+                     "the resilience testbed behind the chaos metrics."),
+        mix=ONLINE_CHAOS_HEAVY_MIX,
+        policies=("EBPSM", "EBPSM_NS", "MSLBL_MW"),
+        seeds=(0, 1),
+        warmup_s=120.0,
+        chaos=CHAOS_HEAVY,
+        # Recorded trajectory: budget_met 0.939/1.000, wasted-spend frac
+        # ~0.147 (seeds 0/1).
+        ebpsm_budget_met_floor=0.85,
+        wasted_spend_ceiling=0.20,
     ),
 }
 

@@ -71,6 +71,17 @@ class FaultyTrainer:
             except StepFailure:
                 self.restarts += 1
                 last = ckpt.latest_step(self.ckpt_dir)
+                restore_to = start_step if last is None else last
+                # Roll the history back with the parameters: entries at
+                # or past the restore point are about to be re-executed
+                # and would otherwise appear twice (and the final
+                # history would carry losses from abandoned lineages).
+                # Steps ascend, so one reverse scan finds the cut.
+                cut = len(history["step"])
+                while cut > 0 and history["step"][cut - 1] >= restore_to:
+                    cut -= 1
+                del history["step"][cut:]
+                del history["loss"][cut:]
                 if last is None:     # no checkpoint yet → restart from init
                     step = start_step
                     continue

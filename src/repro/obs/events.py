@@ -35,7 +35,9 @@ import numpy as np
 # Versioned wire schema for the JSONL dump (obs.export) and the trace
 # validator (tools/check_trace.py).  Bump on any change to the kind set
 # or a kind's field mapping.
-EVENT_SCHEMA_VERSION = 1
+# v2: chaos kinds 18-21 (VM_REVOKE / TASK_FAIL / TASK_RETRY /
+#     STRAGGLER_DETECT) — see repro.chaos.
+EVENT_SCHEMA_VERSION = 2
 
 # ---- event kinds -----------------------------------------------------------
 WF_ARRIVE = 1            # workflow arrival enters the system
@@ -55,6 +57,10 @@ BUDGET_REDISTRIBUTE = 14  # Algorithm 3 redistribution (either mode)
 BUDGET_SPARE = 15        # spare-pool movement (MSLBL spend, round banking)
 GRID_ROUND = 16          # grid-driver rendezvous round
 GRID_AUCTION = 17        # batched auction call within a round
+VM_REVOKE = 18           # spot lease revoked (repro.chaos)
+TASK_FAIL = 19           # execution attempt failed (spend sunk)
+TASK_RETRY = 20          # failed/preempted task re-entered the queue
+STRAGGLER_DETECT = 21    # finish whose compute time tripped the detector
 
 KIND_NAMES: Dict[int, str] = {
     WF_ARRIVE: "wf_arrive",
@@ -74,6 +80,10 @@ KIND_NAMES: Dict[int, str] = {
     BUDGET_SPARE: "budget_spare",
     GRID_ROUND: "grid_round",
     GRID_AUCTION: "grid_auction",
+    VM_REVOKE: "vm_revoke",
+    TASK_FAIL: "task_fail",
+    TASK_RETRY: "task_retry",
+    STRAGGLER_DETECT: "straggler_detect",
 }
 
 # Per-kind payload declaration: (json_field_name, column) in column order.
@@ -102,6 +112,16 @@ SCHEMA: Dict[int, tuple] = {
     GRID_ROUND: (("round", "a"), ("parked", "b"), ("ridden", "c"),
                  ("pairs", "d")),
     GRID_AUCTION: (("round", "a"), ("requests", "b"), ("pairs", "d")),
+    # Chaos kinds (repro.chaos): wid/tid are -1 on VM_REVOKE when the VM
+    # carried no task; ``busy`` is 1 when a pipeline was killed mid-run.
+    VM_REVOKE: (("vmid", "a"), ("wid", "b"), ("tid", "c"), ("busy", "d"),
+                ("wasted", "x")),
+    TASK_FAIL: (("wid", "a"), ("tid", "b"), ("vmid", "c"), ("attempt", "d"),
+                ("wasted", "x")),
+    TASK_RETRY: (("wid", "a"), ("tid", "b"), ("attempt", "c"),
+                 ("preemptions", "d")),
+    STRAGGLER_DETECT: (("wid", "a"), ("tid", "b"), ("vmid", "c"),
+                       ("rt_ms", "d"), ("ratio", "x")),
 }
 
 # Container-warmth codes shared by TASK_START / VM_CONTAINER (matches the

@@ -64,6 +64,12 @@ class VM:
     terminated_ms: int = -1
     active_container: Optional[str] = None
     owner_tag: Optional[object] = None  # NS: wid; WS: app; else None
+    # Spot market (repro.chaos): spot leases bill at price_per_bp — the
+    # discounted rate — and may be revoked; on-demand leases keep
+    # price_per_bp == vmt.cost_per_bp (set by __post_init__, so direct
+    # VM(...) construction bills identically to the benign model).
+    spot: bool = False
+    price_per_bp: float = -1.0
     # FIFO caches: plain dicts (insertion-ordered since 3.7) — membership
     # checks on these are the hottest ops in the scheduler, and dict
     # lookups beat OrderedDict's doubly-linked bookkeeping.  FIFO
@@ -73,6 +79,10 @@ class VM:
         default_factory=dict
     )
     cached_mb: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.price_per_bp < 0.0:
+            self.price_per_bp = self.vmt.cost_per_bp
 
     # ----- container image cache ------------------------------------------
     def container_ms(self, cfg: PlatformConfig, app: str, use_containers: bool) -> int:
@@ -178,7 +188,15 @@ class VMPool:
         self.vm_count_by_type: Dict[str, int] = {v.name: 0 for v in cfg.vm_types}
 
     # ----- lifecycle transitions -------------------------------------------
-    def provision(self, vmt_idx: int, now_ms: int, owner_tag=None) -> VM:
+    def provision(self, vmt_idx: int, now_ms: int, owner_tag=None,
+                  spot: bool = False,
+                  price_per_bp: Optional[float] = None) -> VM:
+        """``spot``/``price_per_bp``: spot-market lease terms
+        (repro.chaos).  The pool's ``price`` array deliberately keeps
+        the on-demand list price either way — the scheduler *plans* at
+        list price and the pipeline *bills* at ``vm.price_per_bp``, so
+        selection math (and engine parity with the benign model) is
+        untouched by the discount."""
         vmt = self.cfg.vm_types[vmt_idx]
         vm = VM(
             vmid=len(self.vms),
@@ -188,6 +206,9 @@ class VMPool:
             lease_start_ms=now_ms,
             ready_ms=now_ms + self.cfg.vm_provision_delay_ms,
             owner_tag=owner_tag,
+            spot=spot,
+            price_per_bp=(vmt.cost_per_bp if price_per_bp is None
+                          else price_per_bp),
         )
         self.vms.append(vm)
         self._live[vm.vmid] = vm
@@ -245,6 +266,19 @@ class VMPool:
 
     def terminate(self, vm: VM, now_ms: int) -> None:
         assert vm.status in (VM_IDLE, VM_PROVISIONING), "cannot kill busy VM"
+        self._close(vm, now_ms)
+
+    def revoke(self, vm: VM, now_ms: int) -> None:
+        """Spot revocation (repro.chaos): the *infrastructure* ends the
+        lease, so — unlike :meth:`terminate`, where the scheduler must
+        never kill a busy VM — any non-terminated status is legal here,
+        including BUSY with a pipeline in flight (the engine requeues
+        the killed task).  Cache eviction and index pruning are the
+        same close-of-lease bookkeeping."""
+        assert vm.status != VM_TERMINATED, "revoking a closed lease"
+        self._close(vm, now_ms)
+
+    def _close(self, vm: VM, now_ms: int) -> None:
         vm.status = VM_TERMINATED
         vm.terminated_ms = now_ms
         self._live.pop(vm.vmid, None)

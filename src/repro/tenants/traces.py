@@ -31,6 +31,7 @@ tests, docs and the ``online-*`` scenario families.
 from __future__ import annotations
 
 import json
+import math
 import os
 import xml.etree.ElementTree as ET
 from typing import Dict, List, Optional, Tuple, Union
@@ -67,6 +68,26 @@ def _strip_ns(tag: str) -> str:
     return tag.rsplit("}", 1)[-1]
 
 
+def _finite_nonneg(x, what: str, name: str, tname: str) -> float:
+    """Parse a runtime / file size field from a hostile trace: must be
+    numeric, finite and non-negative — NaN runtimes would otherwise
+    propagate into task sizes and poison every cost estimate
+    downstream, silently."""
+    try:
+        v = float(x)
+    except (TypeError, ValueError) as e:
+        raise ValueError(
+            f"trace {name!r}: task {tname!r} has non-numeric {what} "
+            f"({x!r})") from e
+    if math.isnan(v) or math.isinf(v):
+        raise ValueError(
+            f"trace {name!r}: task {tname!r} has non-finite {what} ({v!r})")
+    if v < 0.0:
+        raise ValueError(
+            f"trace {name!r}: task {tname!r} has negative {what} ({v})")
+    return v
+
+
 def _finish(name: str, app: Optional[str], specs: List[dict],
             edges: List[Tuple[int, int]]) -> Workflow:
     """Assemble tasks + edges into a validated, calibrated Workflow."""
@@ -76,7 +97,7 @@ def _finish(name: str, app: Optional[str], specs: List[dict],
     cal: TraceCalibration = trace_calibration(family or "")
     tasks = [
         Task(tid=i,
-             size_mi=max(s["runtime_s"], 0.0) * cal.mips,
+             size_mi=s["runtime_s"] * cal.mips,
              out_mb=s["out_mb"] * cal.mb_scale,
              ext_in_mb=s["ext_mb"] * cal.mb_scale)
         for i, s in enumerate(specs)
@@ -127,7 +148,8 @@ def load_dax(source: Source, name: str = "dax") -> Workflow:
             if _strip_ns(u.tag) != "uses":
                 continue
             fname = u.get("file") or u.get("name") or ""
-            mb = float(u.get("size") or 0) / 1e6
+            mb = _finite_nonneg(u.get("size") or 0, f"size of {fname!r}",
+                                name, jid) / 1e6
             if (u.get("link") or "").lower() == "output":
                 out_mb += mb
                 produced[fname] = len(specs)
@@ -135,7 +157,8 @@ def load_dax(source: Source, name: str = "dax") -> Workflow:
                 ins.append((fname, mb))
         index[jid] = len(specs)
         ids.append(jid)
-        specs.append({"runtime_s": float(el.get("runtime") or 0.0),
+        specs.append({"runtime_s": _finite_nonneg(el.get("runtime") or 0.0,
+                                                  "runtime", name, jid),
                       "out_mb": out_mb, "ext_mb": 0.0})
         inputs_of.append(ins)
 
@@ -159,6 +182,10 @@ def load_dax(source: Source, name: str = "dax") -> Workflow:
                 raise ValueError(
                     f"trace {name!r}: <parent ref={pref!r}> of child "
                     f"{cref!r} names no job")
+            if pref == cref:
+                raise ValueError(
+                    f"trace {name!r}: job {cref!r} declares itself as "
+                    f"its own parent (self-edge)")
             edge = (index[pref], index[cref])
             if edge not in seen:
                 seen.add(edge)
@@ -184,7 +211,12 @@ def load_wfcommons(source: Source, name: str = "wfcommons") -> Workflow:
     except json.JSONDecodeError as e:
         raise ValueError(
             f"trace {name!r}: malformed WfCommons JSON ({e})") from e
+    if not isinstance(doc, dict):
+        raise ValueError(
+            f"trace {name!r}: top-level JSON is not an object")
     wf_name = doc.get("name") or name
+    if not isinstance(wf_name, str):
+        raise ValueError(f"trace {name!r}: workflow name is not a string")
     body = doc.get("workflow")
     if not isinstance(body, dict):
         raise ValueError(f"trace {name!r}: missing 'workflow' object")
@@ -197,24 +229,45 @@ def load_wfcommons(source: Source, name: str = "wfcommons") -> Workflow:
     produced: Dict[str, int] = {}
     inputs_of: List[List[Tuple[str, float]]] = []
     for row in rows:
+        if not isinstance(row, dict):
+            raise ValueError(
+                f"trace {name!r}: non-object task record ({row!r})")
         tname = row.get("name") or row.get("id")
         if tname is None:
             raise ValueError(f"trace {name!r}: task without name/id")
+        if not isinstance(tname, str):
+            raise ValueError(
+                f"trace {name!r}: task name {tname!r} is not a string")
         if tname in index:
             raise ValueError(f"trace {name!r}: duplicate task {tname!r}")
         runtime = row.get("runtime", row.get("runtimeInSeconds", 0.0))
         out_mb = 0.0
         ins: List[Tuple[str, float]] = []
-        for f in row.get("files", []):
-            mb = float(f.get("sizeInBytes", f.get("size", 0)) or 0) / 1e6
+        files = row.get("files", [])
+        if not isinstance(files, list):
+            raise ValueError(
+                f"trace {name!r}: task {tname!r} 'files' is not a list")
+        for f in files:
+            if not isinstance(f, dict):
+                raise ValueError(
+                    f"trace {name!r}: task {tname!r} has a non-object "
+                    f"file record ({f!r})")
             fname = f.get("name") or ""
-            if (f.get("link") or "").lower() == "output":
+            if not isinstance(fname, str):
+                raise ValueError(
+                    f"trace {name!r}: task {tname!r} has a non-string "
+                    f"file name ({fname!r})")
+            mb = _finite_nonneg(
+                f.get("sizeInBytes", f.get("size", 0)) or 0,
+                f"size of {fname!r}", name, tname) / 1e6
+            if str(f.get("link") or "").lower() == "output":
                 out_mb += mb
                 produced[fname] = len(specs)
             else:
                 ins.append((fname, mb))
         index[tname] = len(specs)
-        specs.append({"runtime_s": float(runtime or 0.0),
+        specs.append({"runtime_s": _finite_nonneg(runtime or 0.0, "runtime",
+                                                  name, tname),
                       "out_mb": out_mb, "ext_mb": 0.0})
         inputs_of.append(ins)
 
@@ -224,20 +277,42 @@ def load_wfcommons(source: Source, name: str = "wfcommons") -> Workflow:
     seen = set()
     for row in rows:
         tname = row.get("name") or row.get("id")
-        for pref in row.get("parents", []) or []:
+        parents = row.get("parents", []) or []
+        children = row.get("children", []) or []
+        if not isinstance(parents, list) or not isinstance(children, list):
+            raise ValueError(
+                f"trace {name!r}: task {tname!r} parents/children is "
+                f"not a list")
+        for pref in parents:
+            if not isinstance(pref, str):
+                raise ValueError(
+                    f"trace {name!r}: task {tname!r} has a non-string "
+                    f"parent ref ({pref!r})")
             if pref not in index:
                 raise ValueError(
                     f"trace {name!r}: task {tname!r} names unknown "
                     f"parent {pref!r}")
+            if pref == tname:
+                raise ValueError(
+                    f"trace {name!r}: task {tname!r} declares itself as "
+                    f"its own parent (self-edge)")
             edge = (index[pref], index[tname])
             if edge not in seen:
                 seen.add(edge)
                 edges.append(edge)
-        for cref in row.get("children", []) or []:
+        for cref in children:
+            if not isinstance(cref, str):
+                raise ValueError(
+                    f"trace {name!r}: task {tname!r} has a non-string "
+                    f"child ref ({cref!r})")
             if cref not in index:
                 raise ValueError(
                     f"trace {name!r}: task {tname!r} names unknown "
                     f"child {cref!r}")
+            if cref == tname:
+                raise ValueError(
+                    f"trace {name!r}: task {tname!r} declares itself as "
+                    f"its own child (self-edge)")
             edge = (index[tname], index[cref])
             if edge not in seen:
                 seen.add(edge)

@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..chaos import ChaosConfig
 from ..core.engine import SimEngine
 from ..obs import timeseries as obs_ts
 from ..obs.events import EventLog
@@ -106,11 +107,12 @@ def ml_stream(cfg: PlatformConfig, n_jobs: int, rate: float, seed: int,
 def run_platform(wfs: Sequence[Workflow], policy: Policy,
                  cfg: Optional[PlatformConfig] = None,
                  seed: int = 0,
-                 events: Union[None, bool, EventLog] = None
+                 events: Union[None, bool, EventLog] = None,
+                 chaos: Optional[ChaosConfig] = None
                  ) -> PlatformReport:
     cfg = cfg or slices.platform_config()
     eng = SimEngine(cfg, policy, list(wfs), seed=seed, trace=True,
-                    events=events)
+                    events=events, chaos=chaos)
     sim = eng.run()
     return PlatformReport(
         sim=sim,
@@ -175,21 +177,47 @@ def sweep(n_jobs: int = 24, rates: Sequence[float] = (1.0, 4.0),
 
 def straggler_experiment(n_jobs: int = 30, rate: float = 2.0, seed: int = 0,
                          degradations: Sequence[float] = (0.1, 0.3, 0.5),
-                         art_dir: str = "artifacts/dryrun"
-                         ) -> Dict[str, List[Tuple[float, float, float]]]:
+                         art_dir: str = "artifacts/dryrun",
+                         slowdowns: Optional[Sequence[float]] = None,
+                         straggler_prob: float = 0.1
+                         ) -> Dict[str, List[Tuple[float, ...]]]:
     """Straggler mitigation = the paper's §5.2 experiment on slices:
     EBPSM's budget-update loop reallocates successors of slow stages onto
-    faster slices; MSLBL's static safety net cannot.  Returns per-policy
-    [(max_degradation, mean_makespan_s, budget_met)]."""
-    out: Dict[str, List[Tuple[float, float, float]]] = {}
+    faster slices; MSLBL's static safety net cannot.
+
+    Two injection routes share the harness:
+
+    * **degradation sweep** (default) — per-VM CPU degradation drawn by
+      the cloud model, the paper's own perturbation.  Rows are
+      ``(max_degradation, mean_makespan_s, budget_met)``.
+    * **chaos sweep** (``slowdowns=(2.0, 4.0, ...)``) — seeded per-task
+      runtime inflation via :class:`repro.chaos.ChaosConfig`
+      (``straggler_prob`` of tasks run ``slowdown ×`` their modelled
+      time), with detections (actual > ``straggler_factor ×`` estimate)
+      counted by the engine.  Rows are
+      ``(slowdown, mean_makespan_s, budget_met, stragglers_detected)``.
+    """
+    out: Dict[str, List[Tuple[float, ...]]] = {}
     for pol in (EBPSM, MSLBL_MW):
-        rows = []
-        for dmax in degradations:
-            cfg = slices.platform_config(
-                cpu_degradation_mean=dmax / 2, cpu_degradation_std=0.01,
-                cpu_degradation_max=dmax)
-            wfs = ml_stream(cfg, n_jobs, rate, seed, art_dir)
-            rep = run_platform(wfs, pol, cfg, seed=seed)
-            rows.append((dmax, rep.mean_makespan_s, rep.budget_met))
+        rows: List[Tuple[float, ...]] = []
+        if slowdowns is None:
+            for dmax in degradations:
+                cfg = slices.platform_config(
+                    cpu_degradation_mean=dmax / 2, cpu_degradation_std=0.01,
+                    cpu_degradation_max=dmax)
+                wfs = ml_stream(cfg, n_jobs, rate, seed, art_dir)
+                rep = run_platform(wfs, pol, cfg, seed=seed)
+                rows.append((dmax, rep.mean_makespan_s, rep.budget_met))
+        else:
+            cfg = slices.platform_config()
+            for slow in slowdowns:
+                chaos = ChaosConfig(straggler_prob=straggler_prob,
+                                    straggler_slowdown=slow,
+                                    straggler_factor=max(2.0, slow / 2),
+                                    seed=seed)
+                wfs = ml_stream(cfg, n_jobs, rate, seed, art_dir)
+                rep = run_platform(wfs, pol, cfg, seed=seed, chaos=chaos)
+                rows.append((slow, rep.mean_makespan_s, rep.budget_met,
+                             float(rep.metrics.stragglers_detected)))
         out[pol.name] = rows
     return out

@@ -310,6 +310,9 @@ TRACE_CALIBRATION: Dict[str, TraceCalibration] = {
     "ligo": TraceCalibration(mips=4.0, mb_scale=1.0),
     # SIPHT: low everything.
     "sipht": TraceCalibration(mips=4.0, mb_scale=1.0),
+    # Seismology (cross-correlation / deconvolution): CPU-leaning tasks
+    # over modest waveform volumes, traced on a mid-range host.
+    "seismology": TraceCalibration(mips=6.0, mb_scale=1.0),
 }
 
 DEFAULT_TRACE_CALIBRATION = TraceCalibration()
@@ -325,6 +328,8 @@ TRACE_FAMILY_HINTS: Dict[str, str] = {
     "inspiral": "ligo",
     "sipht": "sipht",
     "srna": "sipht",
+    "seismolog": "seismology",     # seismology / seismological
+    "iterdecon": "seismology",
 }
 
 

@@ -21,7 +21,7 @@ import numpy as np
 import pytest
 
 from repro import ckpt
-from repro.core.engine import SimEngine
+from repro.core.engine import STREAM_SNAPSHOT_VERSION, SimEngine
 from repro.core.jax_engine import BatchSimEngine, StreamInterrupted
 from repro.core.scheduler import EBPSM, EBPSM_NS, MSLBL_MW
 from repro.core.types import PlatformConfig
@@ -178,7 +178,7 @@ def test_load_snapshot_rejects_member_count_mismatch():
 def test_simstate_snapshot_version_gate():
     st = SimEngine(CFG, EBPSM, workload(7, n=3), seed=0)
     snap = st.snapshot()
-    assert snap["version"] == 1
+    assert snap["version"] == STREAM_SNAPSHOT_VERSION
     snap["version"] = 99
     fresh = SimEngine(CFG, EBPSM, workload(7, n=3), seed=0)
     with pytest.raises(ValueError):

@@ -153,6 +153,87 @@ def test_importer_rejects_empty_and_malformed():
                  '<child ref="J9"><parent ref="J1"/></child></adag>')
 
 
+def test_importer_rejects_hostile_fields():
+    """NaN / negative / non-numeric runtimes and sizes, self-edges —
+    descriptive ValueErrors, never a silent clip or a mid-sim crash."""
+    with pytest.raises(ValueError, match="non-finite"):
+        load_wfcommons('{"workflow": {"tasks": ['
+                       '{"name": "a", "runtime": NaN}]}}')
+    with pytest.raises(ValueError, match="negative"):
+        load_wfcommons('{"workflow": {"tasks": ['
+                       '{"name": "a", "runtime": -3.0}]}}')
+    with pytest.raises(ValueError, match="non-numeric"):
+        load_wfcommons('{"workflow": {"tasks": ['
+                       '{"name": "a", "runtime": "soon"}]}}')
+    with pytest.raises(ValueError, match="negative"):
+        load_wfcommons('{"workflow": {"tasks": [{"name": "a", "runtime": 1,'
+                       ' "files": [{"name": "f", "sizeInBytes": -5}]}]}}')
+    with pytest.raises(ValueError, match="self-edge"):
+        load_wfcommons('{"workflow": {"tasks": ['
+                       '{"name": "a", "runtime": 1, "parents": ["a"]}]}}')
+    with pytest.raises(ValueError, match="self-edge"):
+        load_wfcommons('{"workflow": {"jobs": ['
+                       '{"name": "a", "runtime": 1, "children": ["a"]}]}}')
+    with pytest.raises(ValueError, match="duplicate"):
+        load_wfcommons('{"workflow": {"tasks": [{"name": "a", "runtime": 1},'
+                       ' {"name": "a", "runtime": 2}]}}')
+    with pytest.raises(ValueError, match="not a list"):
+        load_wfcommons('{"workflow": {"tasks": ['
+                       '{"name": "a", "runtime": 1, "files": 7}]}}')
+    with pytest.raises(ValueError, match="non-numeric"):
+        load_dax('<adag><job id="J1" runtime="soon"/></adag>')
+    with pytest.raises(ValueError, match="negative"):
+        load_dax('<adag><job id="J1" runtime="1">'
+                 '<uses file="f" link="output" size="-9"/></job></adag>')
+    with pytest.raises(ValueError, match="self-edge"):
+        load_dax('<adag><job id="J1" runtime="1"/>'
+                 '<child ref="J1"><parent ref="J1"/></child></adag>')
+
+
+def _mutate(data: bytes, rng: np.random.default_rng) -> bytes:
+    """One seeded mutation: truncate, delete a span, duplicate a span,
+    or flip bytes — the classic fuzz moves over trace bytes."""
+    n = len(data)
+    op = rng.integers(0, 4)
+    if op == 0:                                    # truncate
+        return data[:rng.integers(0, n)]
+    i = int(rng.integers(0, n))
+    j = min(n, i + int(rng.integers(1, 64)))
+    if op == 1:                                    # delete span
+        return data[:i] + data[j:]
+    if op == 2:                                    # duplicate span
+        return data[:j] + data[i:j] + data[j:]
+    flipped = bytearray(data)                      # flip bytes
+    for k in range(i, j):
+        flipped[k] ^= int(rng.integers(1, 256))
+    return bytes(flipped)
+
+
+@pytest.mark.parametrize("name", ["montage-18", "epigenomics-20",
+                                  "seismology-9", "cybershake-12"])
+def test_fuzzed_traces_fail_closed(name):
+    """Seeded mutation fuzz over every bundled trace: each mutant either
+    parses into a *valid* Workflow or raises ValueError — no other
+    exception type, no invalid DAG, ever escapes the importer."""
+    for ext in (".dax", ".json"):
+        path = os.path.join(DATA_DIR, name + ext)
+        if os.path.exists(path):
+            break
+    with open(path, "rb") as f:
+        pristine = f.read()
+    loader = load_wfcommons if ext == ".json" else load_dax
+    rng = np.random.default_rng(0xF022 + len(name))
+    for trial in range(60):
+        mutant = _mutate(pristine, rng)
+        try:
+            wf = loader(mutant, name=f"{name}#{trial}")
+        except ValueError:
+            continue
+        wf.validate()                    # parsed → must be a legal DAG
+        for t in wf.tasks:
+            assert t.size_mi >= 0 and t.out_mb >= 0 and t.ext_in_mb >= 0
+
+
 def test_load_trace_dispatches_on_extension():
     wf = load_trace(os.path.join(DATA_DIR, "montage-18.dax"))
     assert wf.n_tasks == 18

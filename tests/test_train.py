@@ -111,6 +111,24 @@ def test_faulty_trainer_recovers(tmp_path):
     assert hist["loss"][-1] < hist["loss"][0]
 
 
+def test_faulty_trainer_history_rolls_back_with_restart(tmp_path):
+    """A restart truncates history to the restore point: the final
+    history is exactly one entry per step with no duplicates from
+    re-executed (abandoned-lineage) steps."""
+    m = tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(m))
+    plan = FaultPlan(fail_prob=0.3, seed=5, ckpt_every=4, keep=2)
+    tr = FaultyTrainer(str(tmp_path), plan)
+    params, opt, hist = tr.run(params=params, opt=opt, n_steps=12,
+                               step_fn=step,
+                               batch_fn=lambda s: tiny_batch(m.cfg, 0))
+    assert tr.restarts > 0, "fault injection never fired — raise fail_prob"
+    assert hist["step"] == list(range(12))
+    assert len(hist["loss"]) == len(hist["step"])
+
+
 def test_elastic_restore_different_sharding(tmp_path):
     """Checkpoint written unsharded restores onto a mesh sharding."""
     from jax.sharding import NamedSharding, PartitionSpec as P
