@@ -39,7 +39,10 @@ PyTree = Any
 # the array block / residue contract changes; ``restore_stream`` refuses
 # manifests newer than this.  v2: chaos residue (attempt/preemption
 # counters + injection tallies) — v1 snapshots still restore (benign
-# defaults fill the missing keys).
+# defaults fill the missing keys).  The live SLO monitor needs no
+# version of its own: it rides the residue's opaque event-log pickle as
+# ``elog.sub`` (repro.obs.monitor), so pre-monitor snapshots restore
+# with monitoring simply absent.
 STREAM_SCHEMA_VERSION = 2
 
 

@@ -44,6 +44,7 @@ from .types import (
 )
 from ..chaos import ChaosConfig, chaos_draws
 from ..obs import events as obs_events
+from ..obs import monitor as obs_monitor
 from ..obs import timeseries as obs_ts
 from ..obs.events import EventLog
 from ..sim.cloud import (VM, VM_BUSY, VM_IDLE, VM_PROVISIONING,
@@ -83,6 +84,9 @@ def _object_state_forced() -> bool:
 # changes; repro.ckpt.checkpoint.restore_stream refuses newer ones).
 # v2: chaos residue (attempt/preemption counters, injection tallies) and
 #     the extended _Running fields (start_ms, rt_ms, est_rt_ms).
+#     The live monitor (repro.obs.monitor) needs no version of its own:
+#     it rides the opaque elog pickle as ``elog.sub`` — v2 snapshots
+#     written before the monitor existed restore with ``sub = None``.
 STREAM_SNAPSHOT_VERSION = 2
 
 
@@ -330,6 +334,7 @@ class SimState:
         profile: Optional[bool] = None,
         events: Union[None, bool, EventLog] = None,
         chaos: Optional[ChaosConfig] = None,
+        monitor: Union[None, bool, "obs_monitor.Monitor"] = None,
     ):
         """``predistributed``: wid → spare budget for workflows whose
         arrival-time budget distribution (Algorithm 1 / MSLBL) already ran
@@ -372,7 +377,15 @@ class SimState:
         revocation, task-failure and straggler injection (deterministic
         in (seed, config); see repro.chaos).  ``None`` or an all-zero
         config disables injection entirely: ``self.chaos is None`` and
-        every chaos branch is one attribute-load + None test."""
+        every chaos branch is one attribute-load + None test.
+
+        ``monitor``: None/bool/:class:`~repro.obs.monitor.Monitor` —
+        the live SLO monitor (repro.obs.monitor).  None defers to
+        ``REPRO_MONITOR=1``; when on it subscribes to the event log's
+        emit path (``elog.sub``), allocating a log if tracing was off.
+        The monitor is reachable from the pickled ``elog`` residue, so
+        stream snapshots carry it and resume replays its windows and
+        alerts bit-identically."""
         if redistribute not in ("finish", "round"):
             raise ValueError(f"redistribute={redistribute!r} "
                              "(expected 'finish' or 'round')")
@@ -409,6 +422,14 @@ class SimState:
         # Structured event log (repro.obs) — None unless opted in; every
         # emission below is guarded by one `is not None` test.
         self.elog: Optional[EventLog] = obs_events.resolve_events(events)
+        # Live SLO monitor (repro.obs.monitor): subscribes to the emit
+        # path.  Monitoring implies an event log (the monitor has no
+        # other input); with both off the hot path is untouched.
+        self.monitor = obs_monitor.resolve_monitor(monitor)
+        if self.monitor is not None:
+            if self.elog is None:
+                self.elog = EventLog()
+            self.elog.sub = self.monitor
         total_tasks = sum(w.n_tasks for w in self.workflows)
         # Global per-task degradation tables, indexed by task global id.
         # Kept as plain-float lists: the pipeline math runs per dispatch
@@ -1153,6 +1174,11 @@ class SimState:
                     self.elog.append(obs_events.VM_REAP, self.now,
                                      vm.vmid, 1)
         self.pool.finalize(self.now)
+        if self.monitor is not None:
+            # Flush the remaining sample boundaries (the closing reaps
+            # above already streamed through the subscriber) and stamp
+            # the horizon; open alerts keep cleared_ms = -1.
+            self.monitor.finalize(self.now)
         peak_vms, mean_fleet = self._fleet_stats()
         results = [
             WorkflowResult(
@@ -1336,6 +1362,12 @@ class SimState:
         # restored from the cut replaces whatever the constructor made,
         # so resumed traces are byte-identical with uninterrupted runs.
         self.elog = residue.get("elog")
+        # The live monitor rides the elog residue (elog.sub): restoring
+        # the log restores its windows, gates and alert history, so a
+        # resumed stream replays alerts bit-identically.  Monitoring
+        # strictly follows the restored stream — a monitor created by
+        # this constructor is dropped if the snapshot ran without one.
+        self.monitor = getattr(self.elog, "sub", None)
         # v1 snapshots (pre-chaos) default to the benign zeros.
         self.task_attempts = residue.get("task_attempts", {})
         self.task_preempts = residue.get("task_preempts", {})
@@ -1362,6 +1394,7 @@ class SimEngine(SimState):
         profile: Optional[bool] = None,
         events: Union[None, bool, EventLog] = None,
         chaos: Optional[ChaosConfig] = None,
+        monitor: Union[None, bool, "obs_monitor.Monitor"] = None,
     ):
         """``batched``: True / False / "auto" — use the JAX batched
         scheduling cycle (core.jax_cycles) when the queue×pool product is
@@ -1377,7 +1410,8 @@ class SimEngine(SimState):
         super().__init__(cfg, policy, workflows, seed=seed, trace=trace,
                          predistributed=predistributed,
                          redistribute=redistribute, soa=soa,
-                         profile=profile, events=events, chaos=chaos)
+                         profile=profile, events=events, chaos=chaos,
+                         monitor=monitor)
         self.batched = batched
 
     # ---- main loop -----------------------------------------------------------

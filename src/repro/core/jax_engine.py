@@ -63,6 +63,7 @@ from .engine import (STREAM_SNAPSHOT_VERSION, SimState,
                      _object_state_forced, profile_overhead_s)
 from .jax_cycles import CycleRequest, multi_cycle
 from ..obs import events as obs_events
+from ..obs import monitor as obs_monitor
 from ..obs.events import EventLog
 from .mslbl import distribute_budget_mslbl
 from .scheduler import Policy
@@ -113,6 +114,9 @@ class BatchSimEngine:
         profile: Optional[bool] = None,
         events: Optional[bool] = None,
         chaos: Optional[ChaosConfig] = None,
+        monitor: Optional[bool] = None,
+        monitor_maps: Optional[Tuple[Dict[int, str], Dict[str, str],
+                                     Dict[int, int]]] = None,
     ):
         """``batched``: False / True / "auto" / "member".
 
@@ -187,11 +191,23 @@ class BatchSimEngine:
         ev_enabled = (obs_events._trace_enabled() if events is None
                       else bool(events))
         self.elog: Optional[EventLog] = EventLog() if ev_enabled else None
+        # Live SLO monitor: one independent Monitor per member (windows
+        # and alerts are per-simulation state), sharing one optional
+        # (tenant_of, qos_of, ideal_ms) map tuple — online streams run
+        # every policy member over the same tenant workload.  The driver
+        # log gets no monitor (GRID_* rounds are not platform signals).
+        mon_enabled = (obs_monitor._monitor_enabled() if monitor is None
+                       else bool(monitor))
+        t_of, q_of, i_ms = monitor_maps or (None, None, None)
         self.states = [
             SimState(cfg, policy, workflows, seed=seed, trace=trace,
                      predistributed=p, redistribute=redistribute,
                      soa=soa_resolved, stream=v, profile=profile,
-                     events=ev_enabled, chaos=chaos)
+                     events=ev_enabled, chaos=chaos,
+                     monitor=(obs_monitor.Monitor(tenant_of=t_of,
+                                                  qos_of=q_of,
+                                                  ideal_ms=i_ms)
+                              if mon_enabled else False))
             for ((policy, workflows, seed), p, v) in zip(members, pre, views)
         ]
         self._resumed = False
@@ -424,6 +440,10 @@ class BatchSimEngine:
         # off so consumers can key on the block unconditionally.
         out["events"] = obs_events.events_block(
             [st.elog for st in self.states] + [self.elog])
+        # Live-monitor block (repro.obs.monitor), summed over member
+        # monitors; integer-only so worker-chunk merges are exact.
+        out["monitor"] = obs_monitor.monitor_block(
+            [st.monitor for st in self.states])
         # REPRO_PROFILE=1 per-phase counters, summed across members.  The
         # headline derived number is the Algorithm-3 redistribution share
         # of the grid wall — the quantity behind the ROADMAP's "~45% of a

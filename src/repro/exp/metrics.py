@@ -67,6 +67,12 @@ class CellMetrics:
     wasted_cost: float = 0.0
     wasted_spend_frac: float = 0.0
     spot_vms: int = 0
+    # ---- live-monitor tallies (repro.obs.monitor; zeros unless the run
+    # carried a monitor).  alerts_open counts alerts still firing at the
+    # horizon; alerts_by_kind keys are repro.obs.slo.ALERT_KIND_NAMES.
+    alerts_total: int = 0
+    alerts_open: int = 0
+    alerts_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @staticmethod
     def _group_stats(rows: List[tuple]) -> Dict:
@@ -94,11 +100,14 @@ class CellMetrics:
         qos_of: Optional[Dict[str, str]] = None,
         ideal_ms: Optional[Dict[int, int]] = None,
         warmup_ms: int = 0,
+        monitor=None,
     ) -> "CellMetrics":
         """``tenant_of`` (wid → tenant), ``qos_of`` (tenant → QoS class)
         and ``ideal_ms`` (wid → critical-path lower bound) switch on the
         per-tenant online metrics; ``warmup_ms`` drops workflows that
-        arrived before it from every statistic (cold-start truncation)."""
+        arrived before it from every statistic (cold-start truncation);
+        ``monitor`` (a :class:`repro.obs.monitor.Monitor`) fills the
+        alert tallies."""
         wfs = [w for w in res.workflows if w.arrival_ms >= warmup_ms]
         n_excluded = len(res.workflows) - len(wfs)
         mks = np.array([w.makespan_ms for w in wfs], np.float64)
@@ -179,6 +188,11 @@ class CellMetrics:
             wasted_spend_frac=(res.wasted_cost / total_spend
                                if total_spend > 0 else 0.0),
             spot_vms=res.spot_vms,
+            alerts_total=len(monitor.alerts) if monitor is not None else 0,
+            alerts_open=(sum(1 for a in monitor.alerts if a.open)
+                         if monitor is not None else 0),
+            alerts_by_kind=(monitor.alerts_by_kind()
+                            if monitor is not None else {}),
         )
 
     @property
@@ -250,5 +264,8 @@ def aggregate_by_policy(cells: Sequence[CellMetrics]) -> Dict[str, Dict]:
                 np.mean([m.wasted_spend_frac for m in ms])),
             "wasted_spend_frac_max": float(
                 np.max([m.wasted_spend_frac for m in ms])),
+            # Live-monitor alert tallies (zeros unless monitored).
+            "alerts_total": int(np.sum([m.alerts_total for m in ms])),
+            "alerts_open_total": int(np.sum([m.alerts_open for m in ms])),
         }
     return out

@@ -41,6 +41,8 @@ from ..core.jax_engine import (BatchSimEngine, GridMember, StreamInterrupted,
                                predistribute_workload)
 from ..core.types import PlatformConfig, clone_workload
 from ..obs import export as obs_export
+from ..obs import monitor as obs_monitor
+from ..obs import report as obs_report
 from ..workflows.workload import cell_workload
 from .metrics import CellMetrics, aggregate_by_policy
 from .scenarios import (POLICY_BY_NAME, OnlineScenario, Scenario,
@@ -110,6 +112,13 @@ def _merge_stats(parts: List[Dict]) -> Dict:
             "by_kind": dict(sorted(by_kind.items())),
             "dropped": sum(e["dropped"] for e in ev_parts),
         }
+    # Live-monitor blocks are integer-only by construction, so summing
+    # them across worker chunks is exact and chunking-order-independent:
+    # serial and --workers runs merge to byte-identical blocks (gated in
+    # tests/test_exp.py and the exp-smoke CI job).
+    mon_parts = [s["monitor"] for s in parts if "monitor" in s]
+    if mon_parts:
+        out["monitor"] = obs_monitor.merge_monitor_blocks(mon_parts)
     if parts:
         # Uniform across parts — every engine in a run shares the mode.
         out["redistribute_mode"] = parts[0].get("redistribute_mode",
@@ -145,6 +154,8 @@ def _grid_batch(
     redistribute: str = "finish",
     events: bool = False,
     trace_dir: Optional[str] = None,
+    report_dir: Optional[str] = None,
+    monitor: bool = False,
 ) -> Tuple[List[Dict], Dict]:
     """Simulate one batch of workload cells × all scenario policies.
 
@@ -154,6 +165,9 @@ def _grid_batch(
     nothing heavy crosses the process boundary).  ``trace_dir`` implies
     ``events`` and writes one Perfetto trace + JSONL dump per
     (cell, policy) — workers write their own cells' files directly.
+    ``report_dir`` implies the live monitor (which implies events) and
+    writes one ``monitor.json`` + HTML dashboard per (cell, policy);
+    ``monitor`` alone collects the monitor block without report files.
     """
     policies = [POLICY_BY_NAME[name] for name in scenario.policies]
     members: List[GridMember] = []
@@ -172,19 +186,24 @@ def _grid_batch(
             members.append((pol, clone_workload(proto), cell.seed))
             labels.append((cell, pol.name))
             pre.append(spares)
+    mon_on = bool(monitor or report_dir)
     engine = BatchSimEngine(cfg, members, trace=trace, predistributed=pre,
                             use_pallas=use_pallas, batched=batched,
                             redistribute=redistribute,
-                            events=bool(events or trace_dir))
+                            events=bool(events or trace_dir or mon_on),
+                            monitor=mon_on or None)
     results = engine.run()
     rows: List[Dict] = []
     vm_type_names = [t.name for t in cfg.vm_types]
     for (cell, pol_name), res, st in zip(labels, results, engine.states):
+        label = _cell_label(scenario.name, cell, pol_name)
         if trace_dir and st.elog is not None:
-            obs_export.write_cell_trace(
-                trace_dir, _cell_label(scenario.name, cell, pol_name),
-                st.elog, vm_type_names=vm_type_names)
-        m = CellMetrics.from_result(pol_name, res, st.trace_rows)
+            obs_export.write_cell_trace(trace_dir, label, st.elog,
+                                        vm_type_names=vm_type_names)
+        if report_dir and st.monitor is not None:
+            obs_report.write_cell_report(report_dir, label, st.monitor)
+        m = CellMetrics.from_result(pol_name, res, st.trace_rows,
+                                    monitor=st.monitor)
         rows.append({
             "app": cell.app,
             "rate_wf_per_min": cell.rate,
@@ -209,6 +228,8 @@ def run_grid(
     executor=None,
     events: bool = False,
     trace_dir: Optional[str] = None,
+    report_dir: Optional[str] = None,
+    monitor: bool = False,
 ) -> Dict:
     """Run the whole grid; returns the artifact payload.
 
@@ -222,6 +243,11 @@ def run_grid(
     ``dispatch.events`` block); ``trace_dir`` additionally writes one
     Perfetto trace + JSONL event dump per (cell, policy) — see
     ``repro.obs`` and docs/PROFILING.md.
+
+    ``monitor`` enables the live SLO monitor (the artifact's
+    ``dispatch.monitor`` block and per-cell alert tallies);
+    ``report_dir`` additionally writes one ``monitor.json`` + HTML
+    dashboard per (cell, policy) — see ``repro.obs.monitor``.
     """
     cfg = cfg or PlatformConfig()
     wcells = list(scenario.workload_cells())
@@ -242,7 +268,7 @@ def run_grid(
         try:
             futs = [ex.submit(_grid_batch, scenario, cfg, b, trace,
                               use_pallas, batched, redistribute,
-                              events, trace_dir)
+                              events, trace_dir, report_dir, monitor)
                     for b in batches]
             for i, f in enumerate(futs):
                 parts.append(f.result())
@@ -257,7 +283,8 @@ def run_grid(
         for batch in batches:
             parts.append(_grid_batch(scenario, cfg, batch, trace,
                                      use_pallas, batched, redistribute,
-                                     events, trace_dir))
+                                     events, trace_dir, report_dir,
+                                     monitor))
             if verbose:
                 done = sum(len(p[0]) for p in parts)
                 print(f"  {done}/{scenario.n_cells} cells "
@@ -282,6 +309,18 @@ def _artifact(scenario, rows: List[Dict], stats: Dict, wall_s: float,
             prof["redistribute_s"] / prof["engine_wall_s"]
     ebpsm = summary.get("EBPSM", {})
     mslbl = summary.get("MSLBL_MW", {})
+    # Data-integrity warnings ride the artifact so consumers see them
+    # even when the run's stdout is long gone.  A ring-truncated event
+    # log means every post-hoc time series derived from it is silently
+    # wrong — say so loudly (main() prints these too).
+    warnings: List[str] = []
+    dropped = stats.get("events", {}).get("dropped", 0)
+    if dropped > 0:
+        warnings.append(
+            f"event ring dropped {dropped} events — post-hoc time series "
+            f"(fleet/queue/cost curves, Perfetto traces) are truncated; "
+            f"raise the EventLog capacity or use the live monitor "
+            f"(--report-dir), which folds events before overwrite")
     return {
         "bench": "paper_grid",
         "scenario": scenario.name,
@@ -300,6 +339,7 @@ def _artifact(scenario, rows: List[Dict], stats: Dict, wall_s: float,
             else None
         ),
         "cells": rows,
+        "warnings": warnings,
         **extra,
     }
 
@@ -353,6 +393,8 @@ def run_online(
     stop_after_ckpts: Optional[int] = None,
     events: bool = False,
     trace_dir: Optional[str] = None,
+    report_dir: Optional[str] = None,
+    monitor: bool = False,
 ) -> Dict:
     """Stream an :class:`OnlineScenario`'s tenant mix through the batched
     engine, one merged multi-tenant stream per seed × every policy.
@@ -376,8 +418,17 @@ def run_online(
     (seed, policy), with task slices categorized by tenant and QoS.
     Event logs ride the stream snapshots, so a resumed run's traces are
     byte-identical with an uninterrupted one (tests/test_obs.py).
+
+    ``monitor`` enables the live SLO monitor (one independent
+    :class:`repro.obs.monitor.Monitor` per (seed, policy) member, fed by
+    tenant/QoS maps so per-QoS burn rates and slowdown SLIs resolve);
+    ``report_dir`` additionally writes one ``monitor.json`` + HTML
+    dashboard per (seed, policy) and implies ``monitor``.  Monitors ride
+    the member event logs through stream snapshots, so a resumed run's
+    alerts and windows are byte-identical with an uninterrupted one.
     """
     cfg = cfg or PlatformConfig()
+    mon_on = bool(monitor or report_dir)
     t0 = time.perf_counter()
     warmup_ms = int(scenario.warmup_s * 1000)
     blo, bhi = scenario.mix.budget_span()
@@ -426,8 +477,11 @@ def run_online(
         engine = BatchSimEngine(cfg, members, trace=trace,
                                 predistributed=pre, use_pallas=use_pallas,
                                 batched=batched, redistribute=redistribute,
-                                events=bool(events or trace_dir),
-                                chaos=scenario.chaos)
+                                events=bool(events or trace_dir or mon_on),
+                                chaos=scenario.chaos,
+                                monitor=mon_on or None,
+                                monitor_maps=(tw.tenant_of, tw.qos_of,
+                                              ideal))
         if resume_snap is not None:
             engine.load_snapshot(resume_snap)
             resume_snap = None
@@ -449,9 +503,14 @@ def run_online(
                     st.elog,
                     vm_type_names=[t.name for t in cfg.vm_types],
                     tenant_of=tw.tenant_of, qos_of=tw.qos_of)
+            if report_dir and st.monitor is not None:
+                obs_report.write_cell_report(
+                    report_dir, f"{scenario.name}__seed{seed}__{name}",
+                    st.monitor)
             m = CellMetrics.from_result(
                 name, res, st.trace_rows, tenant_of=tw.tenant_of,
-                qos_of=tw.qos_of, ideal_ms=ideal, warmup_ms=warmup_ms)
+                qos_of=tw.qos_of, ideal_ms=ideal, warmup_ms=warmup_ms,
+                monitor=st.monitor)
             rows.append({
                 "app": "mixed",
                 "rate_wf_per_min": round(
@@ -474,6 +533,7 @@ def run_online(
         warmup_s=scenario.warmup_s,
         p95_slowdown_ceiling=scenario.p95_slowdown_ceiling,
         wasted_spend_ceiling=scenario.wasted_spend_ceiling,
+        alert_floors=scenario.alert_floors,
         chaos=scenario.chaos.knobs() if scenario.chaos else None,
         tenants=[{
             "name": t.name,
@@ -540,6 +600,27 @@ def check_floors(art: Dict) -> List[str]:
             f"EBPSM mean makespan no longer beats MSLBL_MW "
             f"(ratio {ratio:.3f} >= 1)"
         )
+    alert_floors = art.get("alert_floors") or {}
+    if alert_floors:
+        # Declared floors REQUIRE the live monitor: a run without it
+        # would pass vacuously (zero alerts observed because none were
+        # looked for), which is exactly the silent-regression mode this
+        # gate exists to catch.
+        mon = art.get("dispatch", {}).get("monitor", {})
+        if not mon.get("enabled"):
+            failures.append(
+                "alert floors declared but monitoring disabled — run "
+                "with --report-dir or REPRO_MONITOR=1 so the floors "
+                "are actually evaluated")
+        else:
+            by_kind = mon.get("alerts_by_kind", {})
+            for kind, floor_n in sorted(alert_floors.items()):
+                got = int(by_kind.get(kind, 0))
+                if got < int(floor_n):
+                    failures.append(
+                        f"alert floor: {got} {kind!r} alerts fired "
+                        f"< floor {floor_n} — the chaos scenario no "
+                        f"longer trips its detector")
     return failures
 
 
@@ -642,6 +723,13 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="collect structured events without writing trace "
                          "files (the artifact's dispatch.events block; "
                          "REPRO_TRACE=1 is the env equivalent)")
+    ap.add_argument("--report-dir", default=None,
+                    help="write one monitor.json + self-contained HTML "
+                         "dashboard per (cell, policy) into this directory "
+                         "(implies the live SLO monitor and event "
+                         "collection; REPRO_MONITOR=1 enables the monitor "
+                         "without reports; validate with "
+                         "tools/check_report.py)")
     args = ap.parse_args(argv)
 
     scenario = get_scenario(args.grid)
@@ -663,7 +751,8 @@ def main(argv: Optional[List[str]] = None) -> None:
                              resume=args.resume,
                              stop_after_ckpts=args.stop_after_ckpts,
                              events=args.trace_events,
-                             trace_dir=args.trace_dir)
+                             trace_dir=args.trace_dir,
+                             report_dir=args.report_dir)
         except StreamInterrupted as e:
             print(f"interrupted: {e} — resume with --resume "
                   f"--ckpt-dir {args.ckpt_dir}")
@@ -679,12 +768,20 @@ def main(argv: Optional[List[str]] = None) -> None:
         art = run_grid(scenario, cells_per_batch=args.cells_per_batch,
                        verbose=True, workers=args.workers,
                        redistribute=args.redistribute,
-                       events=args.trace_events, trace_dir=args.trace_dir)
+                       events=args.trace_events, trace_dir=args.trace_dir,
+                       report_dir=args.report_dir)
     if args.trace_dir:
         n_traces = len([f for f in os.listdir(args.trace_dir)
                         if f.endswith(".trace.json")])
         print(f"traces:   {args.trace_dir} ({n_traces} Perfetto traces; "
               f"validate with tools/check_trace.py)")
+    if args.report_dir:
+        n_dash = len([f for f in os.listdir(args.report_dir)
+                      if f.endswith(".dashboard.html")])
+        print(f"reports:  {args.report_dir} ({n_dash} dashboards; "
+              f"validate with tools/check_report.py)")
+    for w in art.get("warnings", []):
+        print(f"WARNING: {w}")
 
     os.makedirs(args.out, exist_ok=True)
     jpath = os.path.join(args.out, ARTIFACT_NAME)

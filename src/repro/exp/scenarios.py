@@ -164,6 +164,12 @@ class OnlineScenario:
     # CI ceiling on EBPSM's wasted-spend fraction (cost sunk into killed/
     # failed attempts ÷ total spend; 0 = not gated).
     wasted_spend_ceiling: float = 0.0
+    # CI floor on live-monitor alert counts, {alert kind name: min count}
+    # summed over the scenario's cells (repro.obs.slo.ALERT_KIND_NAMES).
+    # Declaring floors REQUIRES the run to carry a monitor (--report-dir
+    # or REPRO_MONITOR=1): check_floors fails rather than passing
+    # vacuously when the monitor block is disabled.  None ⇒ not gated.
+    alert_floors: Optional[Dict[str, int]] = None
 
     @property
     def n_workload_cells(self) -> int:
@@ -351,6 +357,10 @@ ONLINE_SCENARIOS: Dict[str, OnlineScenario] = {
         # still catching absorbed-debt regressions.
         ebpsm_budget_met_floor=0.85,
         wasted_spend_ceiling=0.12,
+        # Live-monitor gate: the chaos knobs must trip at least one
+        # wasted-spend burn and one straggler-rate spike somewhere in
+        # the stream (per-policy monitors summed; repro.obs.monitor).
+        alert_floors={"budget_burn": 1, "straggler_spike": 1},
     ),
     "online-chaos": OnlineScenario(
         name="online-chaos",

@@ -144,7 +144,7 @@ class EventLog:
     """Append-only (optionally ring) numpy-columned event buffer."""
 
     __slots__ = ("t", "kind", "a", "b", "c", "d", "x", "y",
-                 "total", "capacity", "_cap")
+                 "total", "capacity", "_cap", "sub")
 
     def __init__(self, capacity: Optional[int] = None):
         """``capacity=None`` (default) grows geometrically and keeps
@@ -160,6 +160,12 @@ class EventLog:
         self.total = 0
         self.capacity = capacity
         self._cap = cap
+        # Optional streaming subscriber (repro.obs.monitor.Monitor): an
+        # object with on_event(kind, t, a, b, c, d, x, y), invoked on
+        # every append *before* ring overwrite can lose the record.  A
+        # single is-None check on the hot path keeps the zero-cost
+        # discipline when no monitor is attached.
+        self.sub = None
 
     # -- hot path ------------------------------------------------------------
     def append(self, kind: int, t_ms: int, a: int = 0, b: int = 0,
@@ -181,6 +187,9 @@ class EventLog:
         self.x[j] = x
         self.y[j] = y
         self.total = i + 1
+        sub = self.sub
+        if sub is not None:
+            sub.on_event(kind, t_ms, a, b, c, d, x, y)
 
     def _grow(self) -> None:
         new_cap = self._cap * 2
@@ -250,9 +259,13 @@ class EventLog:
         state["total"] = self.total
         state["capacity"] = self.capacity
         state["_cap"] = self._cap
+        state["sub"] = self.sub
         return state
 
     def __setstate__(self, state: Dict[str, object]) -> None:
+        # Pre-subscriber pickles (stream snapshots v2 from PR 8) carry
+        # no "sub" key; default it so restored logs stay well-formed.
+        self.sub = None
         for name, v in state.items():
             setattr(self, name, v)
 

@@ -97,10 +97,13 @@ def _kind_times(log: EventLog, kind: int) -> np.ndarray:
 
 
 def fleet_series(log: EventLog) -> TimeSeries:
-    """Live-VM count over time (``VM_PROVISION`` opens, ``VM_REAP``
-    closes — a lease spans provisioning, busy and idle periods)."""
+    """Live-VM count over time (``VM_PROVISION`` opens; ``VM_REAP`` or
+    ``VM_REVOKE`` closes — a spot revocation terminates the lease just
+    as a reap does, so chaos runs stay consistent with the pool's
+    interval accounting)."""
     opens = _kind_times(log, ev_mod.VM_PROVISION)
-    closes = _kind_times(log, ev_mod.VM_REAP)
+    closes = np.concatenate([_kind_times(log, ev_mod.VM_REAP),
+                             _kind_times(log, ev_mod.VM_REVOKE)])
     return step_series(
         "fleet",
         np.concatenate([opens, closes]),
@@ -109,9 +112,17 @@ def fleet_series(log: EventLog) -> TimeSeries:
 
 def busy_series(log: EventLog) -> TimeSeries:
     """Busy-VM count over time (one task pipeline occupies one VM:
-    ``TASK_START`` claims, ``TASK_FINISH`` releases)."""
+    ``TASK_START`` claims; ``TASK_FINISH`` or ``TASK_FAIL`` releases,
+    and a ``VM_REVOKE`` with the busy flag set releases the attempt it
+    killed)."""
     starts = _kind_times(log, ev_mod.TASK_START)
-    ends = _kind_times(log, ev_mod.TASK_FINISH)
+    idx = log._order()
+    kinds = log.kind[idx]
+    revoked_busy = log.t[idx][(kinds == ev_mod.VM_REVOKE)
+                              & (log.d[idx] == 1)]
+    ends = np.concatenate([_kind_times(log, ev_mod.TASK_FINISH),
+                           _kind_times(log, ev_mod.TASK_FAIL),
+                           revoked_busy])
     return step_series(
         "busy",
         np.concatenate([starts, ends]),
@@ -161,10 +172,14 @@ def queue_depth_series(
 
 
 def cumulative_cost_series(log: EventLog) -> TimeSeries:
-    """Cumulative actual cost billed at task finishes."""
+    """Cumulative actual cost billed: task finishes plus the sunk spend
+    of failed attempts and revoked leases (chaos runs)."""
     idx = log._order()
-    fin = log.kind[idx] == ev_mod.TASK_FINISH
-    return step_series("cumulative_cost", log.t[idx][fin], log.x[idx][fin])
+    kinds = log.kind[idx]
+    spend = ((kinds == ev_mod.TASK_FINISH) | (kinds == ev_mod.TASK_FAIL)
+             | (kinds == ev_mod.VM_REVOKE))
+    return step_series("cumulative_cost", log.t[idx][spend],
+                       log.x[idx][spend])
 
 
 def cumulative_budget_series(log: EventLog) -> TimeSeries:
@@ -238,7 +253,8 @@ def cell_summary(log: EventLog, n_samples: int = 64) -> Dict[str, object]:
     grid = np.linspace(0, horizon, n_samples).astype(np.int64) \
         if horizon > 0 else np.zeros(0, np.int64)
     opens = _kind_times(log, ev_mod.VM_PROVISION)
-    closes = _kind_times(log, ev_mod.VM_REAP)
+    closes = np.concatenate([_kind_times(log, ev_mod.VM_REAP),
+                             _kind_times(log, ev_mod.VM_REVOKE)])
     peak, mean = peak_and_mean(opens.tolist(), closes.tolist())
     return {
         "peak_vms": peak,

@@ -17,6 +17,8 @@ import numpy as np
 
 from ..chaos import ChaosConfig
 from ..core.engine import SimEngine
+from ..obs import monitor as obs_monitor
+from ..obs import report as obs_report
 from ..obs import timeseries as obs_ts
 from ..obs.events import EventLog
 from ..core.jax_engine import (BatchSimEngine, GridMember,
@@ -44,6 +46,11 @@ class PlatformReport:
     #: (fleet/busy/utilization/cost-vs-budget curves); ``None`` unless the
     #: run collected events (``run_platform(..., events=True)``).
     series: Optional[Dict[str, object]] = None
+    #: Live-monitor payload (:func:`repro.obs.report.monitor_payload` —
+    #: windowed series, per-QoS SLO table, alerts); ``None`` unless the
+    #: run enabled the monitor (``run_platform(..., monitor=True)`` or
+    #: ``REPRO_MONITOR=1``).
+    monitor: Optional[Dict[str, object]] = None
 
     @property
     def policy(self) -> str:
@@ -108,18 +115,22 @@ def run_platform(wfs: Sequence[Workflow], policy: Policy,
                  cfg: Optional[PlatformConfig] = None,
                  seed: int = 0,
                  events: Union[None, bool, EventLog] = None,
-                 chaos: Optional[ChaosConfig] = None
+                 chaos: Optional[ChaosConfig] = None,
+                 monitor: Union[None, bool, "obs_monitor.Monitor"] = None
                  ) -> PlatformReport:
     cfg = cfg or slices.platform_config()
     eng = SimEngine(cfg, policy, list(wfs), seed=seed, trace=True,
-                    events=events, chaos=chaos)
+                    events=events, chaos=chaos, monitor=monitor)
     sim = eng.run()
     return PlatformReport(
         sim=sim,
-        metrics=CellMetrics.from_result(policy.name, sim, eng.trace_rows),
+        metrics=CellMetrics.from_result(policy.name, sim, eng.trace_rows,
+                                        monitor=eng.monitor),
         slice_mix=dict(eng.pool.vm_count_by_type),
         series=(obs_ts.cell_summary(eng.elog)
                 if eng.elog is not None else None),
+        monitor=(obs_report.monitor_payload(eng.monitor, label=policy.name)
+                 if eng.monitor is not None else None),
     )
 
 

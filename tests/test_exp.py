@@ -169,17 +169,24 @@ def test_run_grid_workers_matches_serial():
         n_workflows=3,
         sizes=("small",),
     )
-    serial = exp_run.run_grid(two, cells_per_batch=1, events=True)
-    par = exp_run.run_grid(two, cells_per_batch=1, workers=2, events=True)
+    serial = exp_run.run_grid(two, cells_per_batch=1, events=True,
+                              monitor=True)
+    par = exp_run.run_grid(two, cells_per_batch=1, workers=2, events=True,
+                           monitor=True)
     assert par["workers"] == 2
     assert par["cells"] == serial["cells"]
     assert par["summary_by_policy"] == serial["summary_by_policy"]
-    # Dispatch equality now also covers the merged obs events block
-    # (_merge_stats sums by-kind counts across worker processes).
+    # Dispatch equality now also covers the merged obs events block and
+    # the live-monitor block (_merge_stats sums by-kind counts and the
+    # integer-only monitor tallies across worker processes).
     assert par["dispatch"] == serial["dispatch"]
     ev = par["dispatch"]["events"]
     assert ev["enabled"] and ev["total"] > 0 and ev["dropped"] == 0
     assert ev["by_kind"]["task_start"] == ev["by_kind"]["task_finish"]
+    mon = par["dispatch"]["monitor"]
+    assert mon["enabled"] and mon["members"] == two.n_cells
+    assert 0 < mon["events"] <= ev["total"]
+    assert mon["samples"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +279,39 @@ def test_check_floors_rejects_empty_post_warmup_cells():
     assert art["cells"][0]["n_workflows"] == 0
     fails = exp_run.check_floors(art)
     assert fails and "no post-warmup workflows" in fails[0]
+
+
+def test_check_floors_alert_gating():
+    """Declared alert floors require the monitor: a monitoring-disabled
+    run fails (never passes vacuously), an under-floor kind fails, and a
+    monitored run meeting the floors passes."""
+    scen = OnlineScenario(
+        name="t", description="t", mix=TINY_ONLINE.mix,
+        policies=("EBPSM",), seeds=(0,), warmup_s=0.0,
+        alert_floors={"budget_burn": 1})
+    art = exp_run.run_online(scen)                # monitor off
+    fails = exp_run.check_floors(art)
+    assert fails and "monitoring disabled" in fails[0]
+    art = exp_run.run_online(scen, monitor=True)  # benign stream: 0 burns
+    fails = exp_run.check_floors(art)
+    assert fails and "alert floor" in fails[0]
+    ok = json.loads(json.dumps(art))
+    ok["dispatch"]["monitor"]["alerts_by_kind"]["budget_burn"] = 2
+    assert exp_run.check_floors(ok) == []
+
+
+def test_artifact_warns_on_dropped_events():
+    """Satellite: a ring-truncated event log surfaces as a loud warning
+    in the artifact (and from there on stdout)."""
+    art = exp_run.run_online(TINY_ONLINE)
+    assert art["warnings"] == []
+    stats = {"events": {"enabled": True, "total": 10, "by_kind": {},
+                        "dropped": 7}}
+    fake = exp_run._artifact(TINY_ONLINE, art["cells"], stats,
+                             wall_s=1.0, workers=1, use_pallas=False,
+                             redistribute="finish")
+    assert len(fake["warnings"]) == 1
+    assert "dropped 7 events" in fake["warnings"][0]
 
 
 def test_warmup_truncates_tier_hist_too():

@@ -137,6 +137,72 @@ def test_sample_step_hold():
     assert ts.sample(s, grid).tolist() == [0.0, 2.0, 2.0, 5.0, 5.0]
 
 
+def test_series_from_empty_log():
+    log = ev.EventLog()
+    for series in (ts.fleet_series(log), ts.busy_series(log),
+                   ts.utilization_series(log),
+                   ts.cumulative_cost_series(log),
+                   ts.cumulative_budget_series(log)):
+        assert len(series.t_ms) == 0
+        assert series.final() == 0.0 and series.at(10_000) == 0.0
+    assert ts.queue_depth_series(log)["all"].final() == 0.0
+    summary = ts.cell_summary(log)
+    assert summary["peak_vms"] == 0 and summary["horizon_ms"] == 0
+    assert summary["t_ms"] == []
+    assert all(v == [] for v in summary["series"].values())
+
+
+def test_series_from_dropped_ring_residue():
+    """A ring that overwrote every provision but kept the reaps still
+    yields a well-formed (if negative-going) step series — derivation
+    never crashes on truncated logs, it just reflects what survived."""
+    log = ev.EventLog(capacity=2)
+    log.append(ev.VM_PROVISION, 10, a=0)
+    log.append(ev.VM_REAP, 50, a=0)
+    log.append(ev.VM_REAP, 60, a=1)            # evicts the provision
+    assert log.dropped == 1
+    fleet = ts.fleet_series(log)
+    assert fleet.t_ms.tolist() == [50, 60]
+    assert fleet.v.tolist() == [-1.0, -2.0]
+    summary = ts.cell_summary(log)
+    assert summary["horizon_ms"] == 60
+
+
+def test_single_event_series():
+    log = ev.EventLog()
+    log.append(ev.VM_PROVISION, 1_000, a=0)
+    fleet = ts.fleet_series(log)
+    assert fleet.t_ms.tolist() == [1_000]
+    assert fleet.at(999) == 0.0 and fleet.at(1_000) == 1.0
+    assert fleet.final() == 1.0
+    util = ts.utilization_series(log)
+    assert util.at(1_000) == 0.0               # fleet without busy VMs
+
+
+def test_peak_and_mean_zero_length_leases():
+    assert ts.peak_and_mean([0], [0]) == (0, 0.0)
+    # A zero-length lease at t>0 contributes no area and no concurrency
+    # (the end's -1 sorts before the start's +1 at the same ms).
+    peak, mean = ts.peak_and_mean([5, 0], [5, 10])
+    assert peak == 1
+    assert mean == pytest.approx(1.0)
+    assert ts.peak_and_mean([], []) == (0, 0.0)
+
+
+def test_fleet_series_counts_revocations_as_closes():
+    log = ev.EventLog()
+    log.append(ev.VM_PROVISION, 0, a=0)
+    log.append(ev.VM_PROVISION, 10, a=1)
+    log.append(ev.VM_REVOKE, 20, a=0, d=1, x=0.5)
+    log.append(ev.VM_REAP, 30, a=1)
+    fleet = ts.fleet_series(log)
+    assert fleet.at(15) == 2.0
+    assert fleet.at(20) == 1.0                 # revocation closes the lease
+    assert fleet.final() == 0.0
+    cost = ts.cumulative_cost_series(log)
+    assert cost.final() == pytest.approx(0.5)  # sunk spend counted
+
+
 def test_series_from_engine_log_match_result():
     eng = SimEngine(CFG, EBPSM, workload(3, n=5), seed=0, events=True)
     res = eng.run()

@@ -1,6 +1,6 @@
 """Benchmark trend table — ingest ``BENCH_*.json`` artifacts.
 
-``python tools/bench_history.py [DIR ...] [--out FILE]``
+``python tools/bench_history.py [DIR ...] [--out FILE] [--check]``
 
 Scans the given directories (default: ``artifacts/bench`` and
 ``artifacts/exp``) for the benchmark artifacts the suite emits
@@ -9,10 +9,14 @@ trend table: current headline numbers next to the recorded historical
 references baked into each artifact (the PR-3 grid wall, the
 pre-array-path Algorithm-3 share), with the delta.
 
-Informational only — always exits 0; the gating lives in
-``benchmarks/check_speedup.py`` and the CI workflow.  ``--out``
-additionally writes the table to a file (CI appends it to the job
-summary).
+Default mode is informational (always exits 0).  ``--check`` turns the
+table into a regression gate: exit 1 when any *dimensionless* metric
+(speedups, shares, ratios — never absolute walls, which don't compare
+across machines) regresses beyond ``--tolerance`` (default 25%)
+relative to its recorded reference.  The bench-smoke CI job runs it in
+this mode so a silent perf slide fails the build instead of scrolling
+by in a log.  ``--out`` additionally writes the table to a file (CI
+appends it to the job summary).
 """
 from __future__ import annotations
 
@@ -23,10 +27,6 @@ import os
 from typing import Dict, List, Optional
 
 DEFAULT_DIRS = ("artifacts/bench", "artifacts/exp")
-
-#: rows: (bench name, metric label, extractor, reference extractor)
-#: extractors return None when the artifact doesn't carry the field —
-#: the row degrades to "n/a" instead of failing on older artifacts.
 
 
 def _get(d: Dict, *path):
@@ -57,13 +57,19 @@ def _delta(cur: Optional[float], ref: Optional[float],
     return f"{pct:+.1f}%{arrow}"
 
 
-def rows_for(doc: Dict, path: str) -> List[List[str]]:
+def rows_for(doc: Dict, path: str) -> List[Dict]:
+    """Structured metric rows for one artifact.  ``gate=True`` rows are
+    dimensionless (machine-portable) and participate in ``--check``;
+    absolute wall times stay informational."""
     bench = doc.get("bench", os.path.basename(path))
-    out: List[List[str]] = []
+    out: List[Dict] = []
 
-    def row(metric, cur, ref, ref_label, lower_is_better=False, unit=""):
-        out.append([bench, metric, _fmt(cur, unit), _fmt(ref, unit),
-                    ref_label, _delta(cur, ref, lower_is_better)])
+    def row(metric, cur, ref, ref_label, lower_is_better=False, unit="",
+            gate=False):
+        out.append({"bench": bench, "metric": metric, "cur": cur,
+                    "ref": ref, "ref_label": ref_label,
+                    "lower_is_better": lower_is_better, "unit": unit,
+                    "gate": gate})
 
     if bench == "grid_wall":
         row("serial wall", _get(doc, "wall_serial_s"),
@@ -71,31 +77,32 @@ def rows_for(doc: Dict, path: str) -> List[List[str]]:
             f"PR3 @{_get(doc, 'pr3_reference', 'commit') or '?'}",
             lower_is_better=True, unit="s")
         row("speedup vs PR3", _get(doc, "speedup_vs_pr3_reference"),
-            1.0, "parity")
+            1.0, "parity", gate=True)
         row("redistribute share (heavy)",
             _get(doc, "redistribution", "heavy", "share"),
             _get(doc, "redistribution", "pre_array_reference", "share"),
-            "pre-array scalar", lower_is_better=True)
+            "pre-array scalar", lower_is_better=True, gate=True)
     elif bench == "makespan":
         row("batched vs ref speedup", _get(doc, "speedup_batched_vs_ref"),
-            1.0, "sequential oracle")
+            1.0, "sequential oracle", gate=True)
         row("batched wall", _get(doc, "batched_wall_s"),
             _get(doc, "ref_wall_s"), "sequential oracle",
             lower_is_better=True, unit="s")
     elif bench == "stream_scale":
         row("object/SoA peak RSS ratio",
             _get(doc, "state_footprint", "object_over_soa_peak_ratio"),
-            1.0, "parity")
+            1.0, "parity", gate=True)
         row("object/SoA wall @max members",
-            _get(doc, "wall_object_over_soa_at_max"), 1.0, "parity")
+            _get(doc, "wall_object_over_soa_at_max"), 1.0, "parity",
+            gate=True)
     elif bench == "paper_grid":
         row("grid wall", _get(doc, "wall_s"), None, "", unit="s")
         row("EBPSM/MSLBL makespan ratio",
             _get(doc, "ebpsm_vs_mslbl_makespan_ratio"), 1.0,
-            "MSLBL parity", lower_is_better=True)
+            "MSLBL parity", lower_is_better=True, gate=True)
         met = _get(doc, "summary_by_policy", "EBPSM", "budget_met_min")
         row("EBPSM budget-met (min)", met,
-            _get(doc, "ebpsm_budget_met_floor"), "CI floor")
+            _get(doc, "ebpsm_budget_met_floor"), "CI floor", gate=True)
     else:
         # Unknown artifact: surface its scalar numerics so new benches
         # show up in the trend table without a code change here.
@@ -106,31 +113,63 @@ def rows_for(doc: Dict, path: str) -> List[List[str]]:
     return out
 
 
-def build_table(dirs: List[str]) -> str:
+def collect_rows(dirs: List[str]) -> "tuple[List[str], List[Dict]]":
+    """(file list, structured rows) for every artifact under ``dirs``.
+    Unreadable artifacts produce a row with ``metric='unreadable'``."""
     files: List[str] = []
     for d in dirs:
         files.extend(sorted(glob.glob(os.path.join(d, "BENCH_*.json"))))
-    lines = ["| bench | metric | current | reference | ref source | delta |",
-             "|---|---|---|---|---|---|"]
-    n_rows = 0
+    rows: List[Dict] = []
     for path in files:
         try:
             with open(path) as f:
                 doc = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
-            lines.append(f"| {os.path.basename(path)} | unreadable ({e}) "
-                         "| | | | |")
+            rows.append({"bench": os.path.basename(path),
+                         "metric": f"unreadable ({e})", "cur": None,
+                         "ref": None, "ref_label": "",
+                         "lower_is_better": False, "unit": "",
+                         "gate": False})
             continue
-        for r in rows_for(doc, path):
-            lines.append("| " + " | ".join(r) + " |")
-            n_rows += 1
+        rows.extend(rows_for(doc, path))
+    return files, rows
+
+
+def build_table(files: List[str], rows: List[Dict],
+                dirs: List[str]) -> str:
+    lines = ["| bench | metric | current | reference | ref source | delta |",
+             "|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            "| " + " | ".join([
+                r["bench"], r["metric"], _fmt(r["cur"], r["unit"]),
+                _fmt(r["ref"], r["unit"]), r["ref_label"],
+                _delta(r["cur"], r["ref"], r["lower_is_better"])]) + " |")
     if not files:
         return ("bench_history: no BENCH_*.json artifacts under "
                 + ", ".join(dirs)
                 + " (run benchmarks/run.py or repro.exp.run first)\n")
-    header = (f"### Benchmark trend ({n_rows} metrics from "
+    header = (f"### Benchmark trend ({len(rows)} metrics from "
               f"{len(files)} artifact(s))\n\n")
     return header + "\n".join(lines) + "\n"
+
+
+def regressions(rows: List[Dict], tolerance: float) -> List[str]:
+    """Gate-row regressions beyond ``tolerance`` (relative, against the
+    recorded reference, oriented per row)."""
+    fails: List[str] = []
+    for r in rows:
+        if not r["gate"] or r["cur"] is None or not r["ref"]:
+            continue
+        cur, ref = float(r["cur"]), float(r["ref"])
+        rel = (cur - ref) / abs(ref)
+        worse = rel if r["lower_is_better"] else -rel
+        if worse > tolerance:
+            fails.append(
+                f"{r['bench']}: {r['metric']} = {cur:.4g} vs reference "
+                f"{ref:.4g} ({r['ref_label']}): {rel:+.1%} is past the "
+                f"{tolerance:.0%} tolerance")
+    return fails
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -140,13 +179,35 @@ def main(argv: Optional[List[str]] = None) -> int:
                          f"(default: {' '.join(DEFAULT_DIRS)})")
     ap.add_argument("--out", default=None,
                     help="also write the markdown table to this file")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when a dimensionless metric (speedup, "
+                         "share, ratio) regresses beyond --tolerance vs "
+                         "its recorded reference (absolute walls are "
+                         "never gated — they don't compare across "
+                         "machines)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative regression tolerance for --check "
+                         "(default 0.25 = 25%%)")
     args = ap.parse_args(argv)
-    table = build_table(args.dirs or list(DEFAULT_DIRS))
+    dirs = args.dirs or list(DEFAULT_DIRS)
+    files, rows = collect_rows(dirs)
+    table = build_table(files, rows, dirs)
     print(table, end="")
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             f.write(table)
+    if args.check:
+        fails = regressions(rows, args.tolerance)
+        if fails:
+            print(f"\nbench_history --check: {len(fails)} regression(s):")
+            for line in fails:
+                print(f"  {line}")
+            return 1
+        n_gated = sum(1 for r in rows
+                      if r["gate"] and r["cur"] is not None and r["ref"])
+        print(f"\nbench_history --check: {n_gated} gated metric(s) within "
+              f"{args.tolerance:.0%} of reference")
     return 0
 
 

@@ -1,0 +1,216 @@
+"""Monitor-report validator — CI gate for ``repro.obs.report`` exports.
+
+``python tools/check_report.py PATH [PATH ...] [--require-alert KIND]``
+
+Each PATH is a ``*.monitor.json`` file or a directory scanned
+(non-recursively) for them.  Validates against the versioned schema in
+:mod:`repro.obs.report` (``repro-obs-monitor`` v1):
+
+* header: ``schema == "repro-obs-monitor"`` with a ``version`` this
+  checker understands, a string ``label`` and integer ``horizon_ms``;
+* samples: ``samples.t_ms`` is a non-decreasing list of non-negative
+  ints; every entry of ``samples.series`` is a finite-float list of the
+  same length;
+* SLO table: one row per QoS class listed in ``qos`` (plus per-series
+  breakdowns are allowed), each carrying its SLI / target pairs;
+* alerts: every record has a ``kind`` from
+  ``repro.obs.slo.ALERT_KIND_NAMES``, integer timestamps with
+  ``fired_ms <= cleared_ms`` (or ``cleared_ms == -1`` while open), and
+  ``alerts_by_kind`` tallies exactly the ``alerts`` list;
+* sibling dashboard: ``<label>.dashboard.html`` exists next to the JSON
+  and contains the ``repro-obs-dashboard`` marker.
+
+``--require-alert KIND`` (repeatable) asserts that at least one alert
+of that kind fired *across all checked files* — the chaos-smoke CI gate
+uses it to pin the budget-burn and straggler-spike detectors.
+
+Exit codes: 0 = all files valid, 1 = validation failures (one line
+each), 2 = no monitor files found under the given paths.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Iterator, List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs.report import (DASHBOARD_MARKER, MONITOR_SCHEMA,  # noqa: E402
+                              MONITOR_SCHEMA_VERSION)
+from repro.obs.slo import ALERT_KIND_NAMES  # noqa: E402
+
+_KNOWN_KINDS = set(ALERT_KIND_NAMES.values())
+
+
+def _iter_files(paths: List[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isdir(p):
+            for name in sorted(os.listdir(p)):
+                if name.endswith(".monitor.json"):
+                    yield os.path.join(p, name)
+        else:
+            yield p
+
+
+def _is_int(v: object) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
+def _is_num(v: object) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_monitor_json(path: str) -> Tuple[List[str], Dict[str, int]]:
+    """Validate one ``*.monitor.json``; returns (errors, alert tallies)."""
+    errs: List[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable JSON ({e})"], {}
+    if doc.get("schema") != MONITOR_SCHEMA:
+        errs.append(f"{path}: schema != {MONITOR_SCHEMA!r}")
+    elif not (_is_int(doc.get("version"))
+              and 1 <= doc["version"] <= MONITOR_SCHEMA_VERSION):
+        errs.append(f"{path}: unsupported version {doc.get('version')!r}")
+    if not isinstance(doc.get("label"), str) or not doc.get("label"):
+        errs.append(f"{path}: label must be a non-empty string")
+    if not (_is_int(doc.get("horizon_ms")) and doc["horizon_ms"] >= 0):
+        errs.append(f"{path}: horizon_ms must be a non-negative int")
+
+    samples = doc.get("samples")
+    if not isinstance(samples, dict):
+        errs.append(f"{path}: samples missing")
+        samples = {}
+    t_ms = samples.get("t_ms", [])
+    if not isinstance(t_ms, list) or not all(
+            _is_int(t) and t >= 0 for t in t_ms):
+        errs.append(f"{path}: samples.t_ms must be non-negative ints")
+    elif any(b < a for a, b in zip(t_ms, t_ms[1:])):
+        errs.append(f"{path}: samples.t_ms must be non-decreasing")
+    series = samples.get("series", {})
+    if not isinstance(series, dict) or not series:
+        errs.append(f"{path}: samples.series missing or empty")
+        series = {}
+    for name, vals in series.items():
+        if not isinstance(vals, list) or len(vals) != len(t_ms):
+            errs.append(f"{path}: series {name!r} length "
+                        f"{len(vals) if isinstance(vals, list) else '?'} "
+                        f"!= {len(t_ms)} samples")
+        elif not all(_is_num(v) for v in vals):
+            errs.append(f"{path}: series {name!r} has non-numeric values")
+
+    slo = doc.get("slo", {})
+    qos = doc.get("qos", [])
+    if not isinstance(slo, dict):
+        errs.append(f"{path}: slo must be an object")
+        slo = {}
+    for qname in (qos if isinstance(qos, list) else []):
+        if qname not in slo:
+            errs.append(f"{path}: slo table missing QoS class {qname!r}")
+    for qname, row in slo.items():
+        for field in ("n_completions", "budget_met", "target_budget_met",
+                      "p95_slowdown", "target_p95_slowdown",
+                      "p95_queue_wait_ms", "target_queue_wait_ms",
+                      "alerts_open"):
+            if not _is_num(row.get(field)):
+                errs.append(f"{path}: slo[{qname!r}].{field} missing or "
+                            f"non-numeric")
+
+    tallies: Dict[str, int] = {}
+    alerts = doc.get("alerts", [])
+    if not isinstance(alerts, list):
+        errs.append(f"{path}: alerts must be a list")
+        alerts = []
+    for i, a in enumerate(alerts):
+        where = f"{path}: alerts[{i}]"
+        if not isinstance(a, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        kind = a.get("kind")
+        if kind not in _KNOWN_KINDS:
+            errs.append(f"{where}: unknown kind {kind!r}")
+        else:
+            tallies[kind] = tallies.get(kind, 0) + 1
+        if not isinstance(a.get("scope"), str):
+            errs.append(f"{where}: scope must be a string")
+        fired = a.get("fired_ms")
+        cleared = a.get("cleared_ms")
+        if not (_is_int(fired) and fired >= 0):
+            errs.append(f"{where}: fired_ms must be a non-negative int")
+        if not _is_int(cleared) or (cleared != -1 and (
+                not _is_int(fired) or cleared < fired)):
+            errs.append(f"{where}: cleared_ms must be -1 (open) or "
+                        f">= fired_ms")
+        for field in ("value", "threshold"):
+            if not _is_num(a.get(field)):
+                errs.append(f"{where}: {field} must be numeric")
+    by_kind = doc.get("alerts_by_kind", {})
+    if by_kind != tallies:
+        errs.append(f"{path}: alerts_by_kind {by_kind!r} inconsistent "
+                    f"with alerts list (expected {tallies!r})")
+
+    dash = path[:-len(".monitor.json")] + ".dashboard.html" \
+        if path.endswith(".monitor.json") else None
+    if dash is not None:
+        try:
+            with open(dash) as f:
+                html = f.read()
+        except OSError:
+            errs.append(f"{path}: sibling dashboard {dash} missing")
+        else:
+            if DASHBOARD_MARKER not in html:
+                errs.append(f"{dash}: missing marker {DASHBOARD_MARKER!r}")
+    return errs, tallies
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+",
+                    help="monitor.json files or directories to validate")
+    ap.add_argument("--require-alert", action="append", default=[],
+                    metavar="KIND",
+                    help="fail unless >= 1 alert of this kind fired across "
+                         "all checked files (repeatable; kinds: "
+                         + ", ".join(sorted(_KNOWN_KINDS)) + ")")
+    args = ap.parse_args(argv)
+    for kind in args.require_alert:
+        if kind not in _KNOWN_KINDS:
+            ap.error(f"--require-alert {kind!r}: unknown alert kind")
+    files = list(_iter_files(args.paths))
+    if not files:
+        print("check_report: no *.monitor.json files found",
+              file=sys.stderr)
+        return 2
+    failures: List[str] = []
+    total: Dict[str, int] = {}
+    checked: List[Tuple[str, int]] = []
+    for path in files:
+        errs, tallies = check_monitor_json(path)
+        failures.extend(errs)
+        for k, n in tallies.items():
+            total[k] = total.get(k, 0) + n
+        checked.append((path, len(errs)))
+    for path, n in checked:
+        print(f"  {'FAIL' if n else 'ok  '} {path}")
+    for kind in args.require_alert:
+        if total.get(kind, 0) < 1:
+            failures.append(f"required alert kind {kind!r} never fired "
+                            f"(tallies: {total or '{}'})")
+    if failures:
+        print(f"\ncheck_report: {len(failures)} problem(s):",
+              file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    fired = ", ".join(f"{k}={n}" for k, n in sorted(total.items())) or "none"
+    print(f"check_report: {len(checked)} file(s) valid "
+          f"(schema v{MONITOR_SCHEMA_VERSION}; alerts: {fired})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

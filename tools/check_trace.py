@@ -16,7 +16,14 @@ versioned schema in :mod:`repro.obs.events` / :mod:`repro.obs.export`:
   ``schema == "repro-obs-events"``, a known ``version`` and an
   ``n_events`` matching the number of body lines; every body line has
   a ``kind`` from ``events.KIND_NAMES``, an integer ``t_ms >= 0`` and
-  exactly the fields ``events.SCHEMA`` declares for that kind.
+  exactly the fields ``events.SCHEMA`` declares for that kind.  Schema
+  v2 added the chaos kinds ``vm_revoke`` (spot revocation),
+  ``task_fail`` / ``task_retry`` (transient failures) and
+  ``straggler_detect`` — dumps from chaos runs must carry them with
+  their declared fields like any other kind.
+
+``--stats`` additionally prints a per-kind event-count table for each
+event dump (quick visibility into what a chaos run actually injected).
 
 Exit codes: 0 = all files valid, 1 = validation failures (one line
 each), 2 = no trace files found under the given paths.
@@ -99,7 +106,10 @@ def check_trace_json(path: str) -> List[str]:
     return errs
 
 
-def check_events_jsonl(path: str) -> List[str]:
+def check_events_jsonl(path: str,
+                       stats: "dict | None" = None) -> List[str]:
+    """Validate one event dump; when ``stats`` is a dict, tally
+    per-kind event counts into it (the ``--stats`` table)."""
     errs: List[str] = []
     try:
         with open(path) as f:
@@ -133,6 +143,8 @@ def check_events_jsonl(path: str) -> List[str]:
         if kind not in _FIELDS_OF:
             errs.append(f"{where}: unknown kind {kind!r}")
             continue
+        if stats is not None:
+            stats[kind] = stats.get(kind, 0) + 1
         if not (_is_int(row.get("t_ms")) and row["t_ms"] >= 0):
             errs.append(f"{where}: t_ms must be a non-negative int")
         want = set(_FIELDS_OF[kind]) | {"kind", "t_ms"}
@@ -149,6 +161,11 @@ def main(argv: List[str] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("paths", nargs="+",
                     help="trace files or directories to validate")
+    ap.add_argument("--stats", action="store_true",
+                    help="print per-kind event counts for each event dump "
+                         "(schema-v2 chaos kinds — vm_revoke, task_fail, "
+                         "task_retry, straggler_detect — show up here "
+                         "when a chaos run injected them)")
     args = ap.parse_args(argv)
     files = list(_iter_files(args.paths))
     if not files:
@@ -157,15 +174,26 @@ def main(argv: List[str] = None) -> int:
         return 2
     failures: List[str] = []
     checked: List[Tuple[str, int]] = []
+    kind_stats: "dict[str, dict]" = {}
     for path in files:
         if path.endswith(".events.jsonl"):
-            errs = check_events_jsonl(path)
+            per_file: "dict | None" = {} if args.stats else None
+            errs = check_events_jsonl(path, stats=per_file)
+            if per_file is not None:
+                kind_stats[path] = per_file
         else:
             errs = check_trace_json(path)
         failures.extend(errs)
         checked.append((path, len(errs)))
     for path, n in checked:
         print(f"  {'FAIL' if n else 'ok  '} {path}")
+    if args.stats:
+        for path, counts in kind_stats.items():
+            total = sum(counts.values())
+            print(f"\n  {path}: {total} events")
+            for kind, n in sorted(counts.items(),
+                                  key=lambda kv: (-kv[1], kv[0])):
+                print(f"    {kind:20s} {n}")
     if failures:
         print(f"\ncheck_trace: {len(failures)} problem(s):", file=sys.stderr)
         for line in failures:
